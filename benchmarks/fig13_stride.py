@@ -1,0 +1,71 @@
+"""Paper Fig. 13: stride size vs performance vs computation.
+
+Claims reproduced:
+  * larger stride -> larger skipped area -> (trend) lower F1/AUC;
+  * computation (#fragments) falls quadratically with stride, so the
+    operating point is the largest stride matching stride-1 performance.
+
+Efficiency: stride-s windows are a sub-grid of the stride-2 windows, so
+every stride row derives EXACTLY from one cached stride-2 score-map pass
+(the reuse encoder's cost is stride-independent, so this is a 4x saving).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import encoding, hypersense, metrics
+
+SIZE = 16
+DIM = 8192
+BASE_STRIDE = 2
+N_FRAMES = 48
+
+
+def base_maps():
+    """(N, my, mx) stride-2 fragment score maps (cached)."""
+    def build():
+        import jax
+        import jax.numpy as jnp
+        model, _, _, _ = common.hdc_model(SIZE, DIM)
+        _, _, fte, _, lte = common.dataset()
+        B0 = model.B.reshape(SIZE, SIZE, DIM)[:, 0, :]
+        hs = hypersense.HyperSenseModel(
+            class_hvs=model.class_hvs, B0=B0, b=model.b, h=SIZE, w=SIZE,
+            stride=BASE_STRIDE, t_score=0.0, t_detection=0)
+        score = jax.jit(lambda f: hypersense.score_frame(hs, f))
+        maps = np.stack([np.asarray(score(jnp.asarray(f)))
+                         for f in fte[:N_FRAMES]])
+        return maps, lte[:N_FRAMES]
+
+    return common.cached(f"fig13_maps_{N_FRAMES}", build)
+
+
+def run() -> list[dict]:
+    maps, labels = base_maps()
+    rows = []
+    frame = common.FRAME
+    for stride in [2, 4, 8, 10, 16]:
+        step = stride // BASE_STRIDE
+        sub = maps[:, ::step, ::step]
+        m = encoding.num_windows(frame, SIZE, stride)
+        sub = sub[:, :m, :m]
+        skipped_frac = 1.0 - ((m - 1) * stride + SIZE) ** 2 / frame ** 2
+        scores = sub.reshape(sub.shape[0], -1).max(axis=1)  # t_det=0 score
+        fpr, tpr, thr = metrics.roc_curve(scores, labels)
+        f1s = [metrics.f1_score(scores > t, labels)
+               for t in np.quantile(scores, np.linspace(0.05, 0.95, 19))]
+        rows.append({
+            "name": f"fig13/stride_{stride}",
+            "fragments_per_frame": int(m * m),
+            "skipped_area_frac": round(float(skipped_frac), 4),
+            "auc": round(metrics.auc(fpr, tpr), 4),
+            "best_f1": round(float(np.max(f1s)), 4),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,37 @@
+"""Paper Figs. 14-15: fragment size x dimensionality -> max TPR @ target FPR.
+
+Claims reproduced:
+  * at the LOWEST target FPR, larger fragment sizes win;
+  * as target FPR rises, smaller fragments catch up/overtake (trend);
+  * higher dimensionality helps (Fig. 15 rows).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import metrics
+
+SIZES = [8, 16, 24]
+DIMS = [2048, 8192]
+TARGET_FPRS = [0.05, 0.1, 0.2, 0.3]
+
+
+def run() -> list[dict]:
+    rows = []
+    for dim in DIMS:
+        for size in SIZES:
+            _, _, scores, labels = common.hdc_model(size, dim)
+            fpr, tpr, _ = metrics.roc_curve(scores, labels)
+            entry = {"name": f"fig15/frag{size}_dim{dim}"}
+            for t in TARGET_FPRS:
+                entry[f"tpr@fpr{t}"] = round(
+                    metrics.tpr_at_fpr(fpr, tpr, t), 4)
+            rows.append(entry)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

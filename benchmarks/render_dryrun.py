@@ -1,0 +1,41 @@
+"""Render the dry-run summary table from results/dryrun.jsonl."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    rows = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                r = json.loads(line)
+                rows[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(rows.values())
+
+
+def render(rows) -> str:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    fail = [r for r in rows if r.get("status") != "ok"]
+    out = [f"Dry-run cells compiled OK: {len(ok)}; failed: {len(fail)}\n\n"]
+    out.append("| arch | shape | mesh | chips | compile (s) | "
+               "coll GB/dev |\n|---|---|---|---|---|---|\n")
+    for r in sorted(ok, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        out.append(
+            "| {arch} | {shape} | {mesh} | {chips} | {compile_s} | "
+            "{coll:.1f} |\n".format(
+                coll=r.get("coll_gbytes", 0.0), **r))
+    for r in fail:
+        out.append(f"| {r.get('arch')} | {r.get('shape')} | "
+                   f"{r.get('mesh')} | - | FAIL | - |\n")
+    return "".join(out)
+
+
+if __name__ == "__main__":
+    print(render(load(os.path.join(RESULTS, "dryrun.jsonl"))))

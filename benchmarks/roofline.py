@@ -1,0 +1,69 @@
+"""Roofline table renderer: reads the dry-run JSONL into the
+EXPERIMENTS.md §Roofline markdown table."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    # keep the last record per (arch, shape, mesh); ok supersedes fail
+    dedup = {}
+    for r in rows:
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+        if key in dedup and dedup[key].get("status") == "ok" \
+                and r.get("status") != "ok":
+            continue
+        dedup[key] = r
+    return list(dedup.values())
+
+
+def render_roofline(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | "
+           "bottleneck | roofline frac | useful-FLOP ratio |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("status") != "ok":
+            out.append(f"| {r.get('arch')} | {r.get('shape')} | - | - | - "
+                       f"| FAIL | - | - |\n")
+            continue
+        out.append(
+            "| {arch} | {shape} | {t_compute:.4f} | {t_memory:.4f} | "
+            "{t_collective:.4f} | {bottleneck} | {roofline_fraction:.3f} "
+            "| {useful_flop_ratio:.3f} |\n".format(**r))
+    return "".join(out)
+
+
+def run() -> list[dict]:
+    rows = load(os.path.join(RESULTS, "roofline_baseline.jsonl"))
+    out = []
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append({"name": f"roofline/{r.get('arch')}/"
+                                f"{r.get('shape')}", "status": "fail"})
+            continue
+        out.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "bottleneck": r["bottleneck"],
+            "t_dominant_s": round(max(r["t_compute"], r["t_memory"],
+                                      r["t_collective"]), 4),
+            "roofline_fraction": round(r["roofline_fraction"], 3),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    rows = load(os.path.join(RESULTS, "roofline_baseline.jsonl"))
+    print(render_roofline(rows))

@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows per benchmark plus a summary.
+``python -m benchmarks.run [--only table1]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = ["table1_auc", "fig12_thresholds", "fig13_stride",
+          "fig15_fragsize_dim", "fig16_speedup", "table3_energy",
+          "hypersense_roofline", "roofline"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for suite in SUITES:
+        if args.only and args.only not in suite:
+            continue
+        t0 = time.time()
+        print(f"\n===== {suite} =====", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
+            rows = mod.run()
+            for row in rows:
+                name = row.pop("name")
+                kv = ",".join(f"{k}={v}" for k, v in row.items())
+                print(f"{name},{kv}")
+            print(f"[{suite}] ok in {time.time() - t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(suite)
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        return 1
+    print("\nall benchmark suites passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

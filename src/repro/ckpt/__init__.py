@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing (atomic, keep-K, async, reshardable)."""
+
+from repro.ckpt import checkpoint  # noqa: F401

@@ -1,0 +1,24 @@
+"""HyperSense core: HDC ops, encoders, fragment/frame models, sensor control.
+
+The paper's primary contribution as a composable JAX library:
+
+* :mod:`repro.core.hdc`            — bundle / bind / permute / similarity
+* :mod:`repro.core.encoding`       — RFF + permutation-structured encoders,
+  naive and computation-reuse sliding-window frame encoders
+* :mod:`repro.core.fragment_model` — HDC fragment classifier (train/retrain)
+* :mod:`repro.core.hypersense`     — frame-level detector (T_score,
+  T_detection, stride)
+* :mod:`repro.core.sensor_control` — the intelligent-sensor-control gate
+* :mod:`repro.core.energy`         — end-to-end energy model (Fig 17)
+* :mod:`repro.core.metrics`        — ROC / AUC / partial-AUC / F1
+"""
+
+from repro.core import (  # noqa: F401
+    encoding,
+    energy,
+    fragment_model,
+    hdc,
+    hypersense,
+    metrics,
+    sensor_control,
+)

@@ -1,0 +1,158 @@
+"""End-to-end energy model (paper §V-E, Fig. 17, Table III).
+
+Per-frame energy accounting for three system variants:
+
+* ``conventional``        — high-precision ADC always on, every frame
+  transmitted (3G) and processed by the cloud model.
+* ``compressive_sensing`` — conventional + bit-depth compression (BDC [11])
+  on the transmitted payload.
+* ``hypersense``          — low-precision path + near-sensor HDC always on;
+  the high-precision ADC, transmission and cloud model run only on frames
+  the gate passes. Duty cycle ``d = (1-p)*FPR + p*TPR`` for object
+  probability ``p`` at the chosen ROC operating point.
+
+Constants are literature-grounded defaults (documented inline); because the
+paper does not publish its exact per-component numbers, :func:`calibrate`
+can least-squares fit the 3 free scale constants against Table III, and the
+benchmark reports both default and calibrated reproductions.
+
+Energy component sources:
+  sensor RF front-end: TI AWR1843 ~30 W at 60 fps  -> 0.5 J/frame [21,34],
+    split ~50/50 between RF chain (ungated) and ADC+digital (gated).
+  low-precision ADC: energy/conversion scales ~2^bits (SAR model) [29]
+  HDC near-sensor accel: 8.2 W FPGA at 303 fps (paper Table II) -> 27 mJ
+  3G transmission: ~2.5 J/Mbit (typical 3G radio energy)
+  cloud inference + PUE: server-side CNN inference per [31]-style estimate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class EnergyParams:
+    # --- per-frame Joules ---
+    rf_frontend_j: float = 0.25      # ungated analog front-end
+    adc_hp_j: float = 0.25           # high-precision ADC + digital capture
+    adc_lp_bits: int = 4             # low-precision ADC bit depth
+    adc_hp_bits: int = 12            # high-precision ADC bit depth
+    hdc_accel_j: float = 0.027       # 8.2 W / 303 fps  (paper Table II/V-D)
+    frame_bits: float = 128 * 128 * 8
+    comm_j_per_mbit: float = 2.5     # 3G radio
+    cloud_j: float = 6.0             # server inference + network + PUE
+    bdc_ratio: float = 0.5           # compressive-sensing payload ratio [11]
+
+    @property
+    def adc_lp_j(self) -> float:
+        """SAR-ADC energy ~ 2^bits: lp = hp * 2^(lp_bits - hp_bits) [29]."""
+        return self.adc_hp_j * (2.0 ** (self.adc_lp_bits - self.adc_hp_bits))
+
+    @property
+    def comm_j(self) -> float:
+        return self.comm_j_per_mbit * self.frame_bits / 1e6
+
+
+@dataclass(frozen=True)
+class EnergyBreakdown:
+    sensor: float
+    adc: float
+    hdc: float
+    comm: float
+    cloud: float
+
+    @property
+    def edge(self) -> float:
+        return self.sensor + self.adc + self.hdc + self.comm
+
+    @property
+    def total(self) -> float:
+        return self.edge + self.cloud
+
+
+def conventional(params: EnergyParams = EnergyParams()) -> EnergyBreakdown:
+    return EnergyBreakdown(sensor=params.rf_frontend_j, adc=params.adc_hp_j,
+                           hdc=0.0, comm=params.comm_j, cloud=params.cloud_j)
+
+
+def compressive_sensing(params: EnergyParams = EnergyParams()
+                        ) -> EnergyBreakdown:
+    """BDC compression shrinks the payload, everything else unchanged."""
+    return EnergyBreakdown(sensor=params.rf_frontend_j, adc=params.adc_hp_j,
+                           hdc=0.0, comm=params.comm_j * params.bdc_ratio,
+                           cloud=params.cloud_j)
+
+
+def duty_cycle(fpr: float, tpr: float, p_object: float) -> float:
+    """Fraction of frames the gate passes to the expensive path."""
+    return (1.0 - p_object) * fpr + p_object * tpr
+
+
+def hypersense(fpr: float, tpr: float, p_object: float = 0.01,
+               params: EnergyParams = EnergyParams()) -> EnergyBreakdown:
+    d = duty_cycle(fpr, tpr, p_object)
+    return EnergyBreakdown(
+        sensor=params.rf_frontend_j,
+        adc=params.adc_lp_j + d * params.adc_hp_j,
+        hdc=params.hdc_accel_j,
+        comm=d * params.comm_j,
+        cloud=d * params.cloud_j,
+    )
+
+
+def savings(ours: EnergyBreakdown, base: EnergyBreakdown) -> dict:
+    return {
+        "total_saving": 1.0 - ours.total / base.total,
+        "edge_saving": 1.0 - ours.edge / base.edge,
+    }
+
+
+def quality_loss(tpr: float) -> float:
+    """Fraction of object frames the gate drops (paper Table III)."""
+    return 1.0 - tpr
+
+
+# ---------------------------------------------------------------------------
+# Calibration against paper Table III
+# ---------------------------------------------------------------------------
+
+#: paper Table III @ p_object = 1%: FPR -> (total saving, edge saving, QL)
+PAPER_TABLE_III = {
+    0.05: (0.921, 0.647, 0.0744),
+    0.10: (0.898, 0.606, 0.0493),
+    0.20: (0.806, 0.524, 0.0292),
+    0.30: (0.713, 0.442, 0.0195),
+}
+
+
+def calibrate(p_object: float = 0.01,
+              table: dict | None = None) -> EnergyParams:
+    """Least-squares fit (rf_frontend, comm, cloud) to Table III.
+
+    TPR at each operating point is implied by the paper's quality loss
+    (QL = 1 - TPR). Keeps ADC/HDC constants at their documented defaults.
+    """
+    import numpy as np
+    from scipy.optimize import least_squares
+
+    table = table or PAPER_TABLE_III
+    base = EnergyParams()
+
+    def residuals(x):
+        rf, comm_scale, cloud = np.abs(x)
+        p = replace(base, rf_frontend_j=rf,
+                    comm_j_per_mbit=comm_scale, cloud_j=cloud)
+        res = []
+        for fpr, (tot, edge, ql) in table.items():
+            tpr = 1.0 - ql
+            ours = hypersense(fpr, tpr, p_object, p)
+            conv = conventional(p)
+            s = savings(ours, conv)
+            res += [s["total_saving"] - tot, s["edge_saving"] - edge]
+        return res
+
+    x0 = [base.rf_frontend_j, base.comm_j_per_mbit, base.cloud_j]
+    sol = least_squares(residuals, x0, method="lm")
+    rf, comm_scale, cloud = [float(abs(v)) for v in sol.x]
+    return replace(base, rf_frontend_j=rf, comm_j_per_mbit=comm_scale,
+                   cloud_j=cloud)

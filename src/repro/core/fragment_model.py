@@ -1,0 +1,168 @@
+"""The *Fragment model* — HDC classification over fragments (paper §III-C a).
+
+Pipeline (paper Fig. 5a):
+  (1) sample balanced positive/negative fragments  -> ``repro.sensing.fragments``
+  (2) normalize + HDC-encode                        -> ``repro.core.encoding``
+  (3) initial training: class hypervectors by bundling
+  (4) iterative retraining: similarity-scaled perceptron updates
+  (5) model selection on validation metrics
+
+The model is a pytree (NamedTuple) so it jit/vmaps/shards cleanly.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hdc
+from repro.core.encoding import NonLin, encode_fragments
+
+Array = jax.Array
+
+
+class FragmentModel(NamedTuple):
+    """HDC classifier state.
+
+    ``class_hvs``: (C, D) class hypervectors, C=2 for HyperSense
+    (index 0 = negative / no-object, 1 = positive / object).
+    ``B``: (n, D) base projection, ``b``: (D,) RFF phase.
+    """
+    class_hvs: Array
+    B: Array
+    b: Array
+
+
+def _encode(model: FragmentModel, frags: Array, nonlinearity: NonLin) -> Array:
+    return encode_fragments(frags, model.B, model.b,
+                            nonlinearity=nonlinearity, normalize=True)
+
+
+@partial(jax.jit, static_argnames=("num_classes",))
+def bundle_init(hvs: Array, labels: Array, num_classes: int = 2) -> Array:
+    """Initial training (paper step 3): ``C_i = sum_{y_j = i} phi(x_j)``."""
+    one_hot = jax.nn.one_hot(labels, num_classes, dtype=hvs.dtype)  # (N, C)
+    return one_hot.T @ hvs                                          # (C, D)
+
+
+def init_fragment_model(key: Array, hvs: Array, labels: Array, B: Array,
+                        b: Array, num_classes: int = 2) -> FragmentModel:
+    del key  # bundling is deterministic; kept for API symmetry
+    return FragmentModel(bundle_init(hvs, labels, num_classes), B, b)
+
+
+@jax.jit
+def retrain_epoch(class_hvs: Array, hvs: Array, labels: Array,
+                  lr: float = 1.0) -> Array:
+    """One retraining epoch (paper step 4).
+
+    For each sample, if mispredicted, update with similarity-scaled rate:
+      ``C_l  += lr * (1 - delta) * phi(x)``   (true class)
+      ``C_l' -= lr * (1 - delta) * phi(x)``   (predicted wrong class)
+
+    Sequential over samples (the paper's online rule) via ``lax.scan``.
+    """
+
+    def step(chvs: Array, xy):
+        hv, y = xy
+        scores = hdc.class_scores(hv[None, :], chvs)[0]            # (C,)
+        pred = jnp.argmax(scores)
+        delta = scores[y]
+        rate = lr * (1.0 - delta)
+        wrong = pred != y
+        upd = jnp.zeros_like(chvs).at[y].set(rate * hv)
+        upd = upd.at[pred].add(jnp.where(wrong, -rate, 0.0) * hv)
+        chvs = chvs + jnp.where(wrong, 1.0, 0.0) * upd
+        return chvs, wrong
+
+    class_hvs, miss = jax.lax.scan(step, class_hvs, (hvs, labels))
+    return class_hvs
+
+
+def retrain(model: FragmentModel, hvs: Array, labels: Array, *,
+            epochs: int = 20, lr: float = 1.0,
+            val_hvs: Array | None = None,
+            val_labels: Array | None = None) -> tuple[FragmentModel, dict]:
+    """Iterative retraining with best-epoch selection (paper steps 4-5)."""
+    best = model.class_hvs
+    best_metric = -jnp.inf
+    history = []
+    chvs = model.class_hvs
+    vh = hvs if val_hvs is None else val_hvs
+    vl = labels if val_labels is None else val_labels
+    for _ in range(epochs):
+        chvs = retrain_epoch(chvs, hvs, labels, lr)
+        acc = accuracy(chvs, vh, vl)
+        history.append(float(acc))
+        if acc > best_metric:
+            best_metric, best = acc, chvs
+    return model._replace(class_hvs=best), {
+        "val_accuracy": history, "best": float(best_metric)}
+
+
+@jax.jit
+def scores(class_hvs: Array, hvs: Array) -> Array:
+    """(N, C) cosine-similarity scores (paper inference, §III-A step 3)."""
+    return hdc.class_scores(hvs, class_hvs)
+
+
+@jax.jit
+def positive_score(class_hvs: Array, hvs: Array) -> Array:
+    """Scalar detection score in [-1, 1]: sim(pos) - sim(neg).
+
+    Used as the fragment prediction score ``s_i`` that ``T_score``
+    thresholds. Monotone in the paper's argmax rule and ROC-sweepable.
+    """
+    s = hdc.class_scores(hvs, class_hvs)
+    return s[:, 1] - s[:, 0]
+
+
+@jax.jit
+def predict(class_hvs: Array, hvs: Array) -> Array:
+    return jnp.argmax(hdc.class_scores(hvs, class_hvs), axis=-1)
+
+
+@jax.jit
+def accuracy(class_hvs: Array, hvs: Array, labels: Array) -> Array:
+    return jnp.mean(predict(class_hvs, hvs) == labels)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end convenience: train a fragment model from raw fragments
+# ---------------------------------------------------------------------------
+
+def train_fragment_model(key: Array, frags: Array, labels: Array, *,
+                         dim: int, epochs: int = 20, lr: float = 1.0,
+                         base_kind: str = "perm",
+                         nonlinearity: NonLin = "rff",
+                         val_frags: Array | None = None,
+                         val_labels: Array | None = None
+                         ) -> tuple[FragmentModel, dict]:
+    """Train on raw fragments ``(N, h, w)`` with permutation-structured base.
+
+    ``base_kind='perm'`` matches the accelerator datapath (paper §IV-B);
+    ``'iid'`` is the textbook encoder (§III-A) for ablations.
+    """
+    from repro.core import encoding
+
+    n, h, w = frags.shape[0], frags.shape[1], frags.shape[2]
+    if base_kind == "perm":
+        B0, b = encoding.make_perm_base_rows(key, h, dim)
+        B = encoding.flat_perm_base(B0, w)
+    elif base_kind == "iid":
+        B, b = encoding.make_iid_base(key, h * w, dim)
+    else:
+        raise ValueError(base_kind)
+
+    hvs = encode_fragments(frags, B, b, nonlinearity=nonlinearity)
+    model = FragmentModel(bundle_init(hvs, labels), B, b)
+    v_hvs = v_lab = None
+    if val_frags is not None:
+        v_hvs = encode_fragments(val_frags, B, b, nonlinearity=nonlinearity)
+        v_lab = val_labels
+    model, info = retrain(model, hvs, labels, epochs=epochs, lr=lr,
+                          val_hvs=v_hvs, val_labels=v_lab)
+    return model, info

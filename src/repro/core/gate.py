@@ -1,0 +1,78 @@
+"""HyperSenseGate: the paper's technique as a compute front-end.
+
+Generalizes Intelligent Sensor Control (paper §III-B) from gating an ADC
+to gating *any* expensive backend — in this framework, the LM backbones:
+frames/segments that the HDC model rejects never enter the backend batch,
+so backend FLOPs scale with the duty cycle exactly as the paper's
+high-precision-ADC energy does (EXPERIMENTS §Paper/energy).
+
+Pipeline-level (host numpy + jitted per-frame scoring), deliberately
+outside jit: this is the data-loading stage in front of
+``repro.train.loop`` / ``repro.launch.serve``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core import hypersense
+from repro.core.sensor_control import ControllerConfig, SensorController
+
+
+@dataclass
+class GateStats:
+    n_seen: int = 0
+    n_passed: int = 0
+
+    @property
+    def duty_cycle(self) -> float:
+        return self.n_passed / max(self.n_seen, 1)
+
+
+class HyperSenseGate:
+    """Stateful stream gate: ``select(frames) -> indices`` of frames the
+    backend should process (controller hysteresis included)."""
+
+    def __init__(self, model: hypersense.HyperSenseModel,
+                 controller: ControllerConfig | None = None,
+                 backend: str = "jnp"):
+        self.model = model
+        self.controller = SensorController(controller)
+        self.stats = GateStats()
+        self._decide = jax.jit(
+            lambda f: hypersense.detect(model, f, backend=backend))
+
+    def select(self, frames) -> np.ndarray:
+        """Indices of gated-on frames, in stream order."""
+        keep = []
+        for i, frame in enumerate(np.asarray(frames)):
+            fired = bool(self._decide(frame))
+            on = self.controller.step(fired)
+            self.stats.n_seen += 1
+            if on:
+                self.stats.n_passed += 1
+                keep.append(i)
+        return np.asarray(keep, dtype=np.int64)
+
+    def filter(self, frames, payloads=None):
+        """Gate a stream; returns (kept_payloads, kept_indices).
+
+        ``payloads`` default to the frames themselves — pass the
+        high-precision captures (or token batches) the backend consumes.
+        """
+        idx = self.select(frames)
+        src = frames if payloads is None else payloads
+        return np.asarray(src)[idx], idx
+
+
+def backend_flops_saved(stats: GateStats, flops_per_item: float) -> dict:
+    """Backend-compute accounting mirroring the paper's energy table."""
+    full = stats.n_seen * flops_per_item
+    used = stats.n_passed * flops_per_item
+    return {"duty_cycle": stats.duty_cycle,
+            "backend_flops_full": full,
+            "backend_flops_gated": used,
+            "backend_saving": 1.0 - used / max(full, 1.0)}

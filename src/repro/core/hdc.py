@@ -1,0 +1,82 @@
+"""Fundamental hyperdimensional-computing operations (paper §III-A).
+
+Hypervectors are plain ``jnp.ndarray`` rows of shape ``(..., D)`` with
+D ~ 1K-10K. All three brain-inspired primitives — bundling, binding,
+permutation — plus the similarity measure used throughout HyperSense.
+
+Everything here is pure jnp and jit-safe; the Pallas kernels in
+``repro.kernels`` accelerate the hot paths (encoding, similarity) and are
+validated against these definitions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def bundle(*hvs: Array) -> Array:
+    """Bundling (+): element-wise addition — cognitive *memorization*.
+
+    ``bundle(h1, h2)`` is similar to both ``h1`` and ``h2``.
+    """
+    out = hvs[0]
+    for h in hvs[1:]:
+        out = out + h
+    return out
+
+
+def bind(h1: Array, h2: Array) -> Array:
+    """Binding (*): element-wise multiplication — cognitive *association*.
+
+    The result is dissimilar to both operands but preserves similarity:
+    ``sim(v*h1, v*h2) ~= sim(h1, h2)``.
+    """
+    return h1 * h2
+
+
+def permute(h: Array, shift: int = 1, axis: int = -1) -> Array:
+    """Permutation (rho): cyclic rotation of vector elements.
+
+    Encodes order/position: ``sim(permute(h), h) ~= 0`` for random ``h``.
+    HyperSense generates spatially adjacent base hypervectors by repeated
+    permutation (Eq. 1) — the property the computation-reuse kernel exploits.
+    """
+    return jnp.roll(h, shift, axis=axis)
+
+
+def cosine_similarity(a: Array, b: Array, eps: float = 1e-9) -> Array:
+    """delta(a, b): cosine similarity along the last (hyperdimension) axis.
+
+    Broadcasts over leading axes, e.g. ``a: (N, D)``, ``b: (C, D)`` is *not*
+    broadcast — use :func:`class_scores` for the classifier matmul form.
+    """
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1)
+    return num / jnp.maximum(den, eps)
+
+
+def class_scores(queries: Array, class_hvs: Array, eps: float = 1e-9) -> Array:
+    """Cosine similarity of each query against each class hypervector.
+
+    Args:
+      queries:   ``(N, D)`` encoded query hypervectors.
+      class_hvs: ``(C, D)`` class hypervectors.
+
+    Returns:
+      ``(N, C)`` similarity matrix.
+    """
+    qn = queries / jnp.maximum(
+        jnp.linalg.norm(queries, axis=-1, keepdims=True), eps
+    )
+    cn = class_hvs / jnp.maximum(
+        jnp.linalg.norm(class_hvs, axis=-1, keepdims=True), eps
+    )
+    return qn @ cn.T
+
+
+def hamming_similarity(a: Array, b: Array) -> Array:
+    """Normalized agreement of sign-quantized hypervectors (bipolar HDC)."""
+    return jnp.mean(jnp.sign(a) == jnp.sign(b), axis=-1).astype(jnp.float32)

@@ -1,0 +1,133 @@
+"""The *HyperSense model* — frame-level detection (paper §III-C b, Fig. 5b).
+
+Given a trained :class:`~repro.core.fragment_model.FragmentModel` and three
+hyperparameters (``stride``, ``t_score``, ``t_detection``):
+
+  (6) crop fragments from the frame in a sliding-window manner (``stride``)
+  (7) score every fragment with the Fragment model
+  (8) threshold each score by ``t_score``  -> per-fragment 0/1 prediction
+  (9) frame is positive iff  ``sum(predictions) > t_detection``
+
+ROC machinery: for a fixed ``t_detection = T``, the frame decision
+``count(s_i > t) > T`` is equivalent to ``kth_largest(s, T+1) > t`` — so the
+frame-level detection *score* is the (T+1)-th order statistic of the
+fragment scores, and standard ROC analysis applies (used for Figs. 12-15).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hdc
+from repro.core.encoding import NonLin, encode_frame_naive, encode_frame_reuse
+from repro.core.fragment_model import FragmentModel
+
+Array = jax.Array
+
+
+class HyperSenseModel(NamedTuple):
+    """Frame detector = Fragment model + (h, w, stride, t_score, t_detection).
+
+    ``B0`` is the permutation-generator base ``(h, D)`` the sliding encoder
+    consumes; ``class_hvs``/``b`` come from the trained Fragment model.
+    """
+    class_hvs: Array          # (2, D)
+    B0: Array                 # (h, D) permutation generators
+    b: Array                  # (D,)
+    h: int
+    w: int
+    stride: int
+    t_score: float
+    t_detection: int
+    nonlinearity: NonLin = "rff"
+
+
+def from_fragment_model(model: FragmentModel, B0: Array, *, h: int, w: int,
+                        stride: int, t_score: float = 0.0,
+                        t_detection: int = 0,
+                        nonlinearity: NonLin = "rff") -> HyperSenseModel:
+    """Assemble a HyperSense model (no additional training — paper §III-C)."""
+    return HyperSenseModel(model.class_hvs, B0, model.b, h, w, stride,
+                           t_score, t_detection, nonlinearity)
+
+
+@partial(jax.jit, static_argnames=("h", "w", "stride", "nonlinearity",
+                                   "reuse", "backend"))
+def fragment_score_map(frame: Array, class_hvs: Array, B0: Array, b: Array,
+                       *, h: int, w: int, stride: int,
+                       nonlinearity: NonLin = "rff", reuse: bool = True,
+                       backend: str = "jnp") -> Array:
+    """Score every sliding-window fragment of a frame -> ``(my, mx)``.
+
+    ``backend='pallas'`` routes encode + similarity through the TPU kernels
+    (``repro.kernels``); ``'jnp'`` uses the pure-jnp path.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.fragment_score_map(frame, class_hvs, B0, b, h=h, w=w,
+                                       stride=stride,
+                                       nonlinearity=nonlinearity)
+    enc = encode_frame_reuse if reuse else encode_frame_naive
+    hv = enc(frame, B0, b, h=h, w=w, stride=stride,
+             nonlinearity=nonlinearity)                     # (my, mx, D)
+    my, mx, dim = hv.shape
+    s = hdc.class_scores(hv.reshape(my * mx, dim), class_hvs)
+    s = s[:, 1] - s[:, 0]
+    return s.reshape(my, mx)
+
+
+def score_frame(model: HyperSenseModel, frame: Array, *,
+                reuse: bool = True, backend: str = "jnp") -> Array:
+    return fragment_score_map(
+        frame, model.class_hvs, model.B0, model.b, h=model.h, w=model.w,
+        stride=model.stride, nonlinearity=model.nonlinearity, reuse=reuse,
+        backend=backend)
+
+
+def detect(model: HyperSenseModel, frame: Array, *,
+           backend: str = "jnp") -> Array:
+    """Boolean frame-level decision (paper steps 8-9)."""
+    s = score_frame(model, frame, backend=backend)
+    count = jnp.sum(s > model.t_score)
+    return count > model.t_detection
+
+
+def frame_detection_score(scores: Array, t_detection: int) -> Array:
+    """ROC-sweepable frame score: the (t_detection+1)-th largest fragment
+    score. ``frame positive at threshold t  <=>  score > t``."""
+    flat = scores.reshape(-1)
+    k = jnp.minimum(t_detection, flat.shape[0] - 1)
+    sorted_desc = jnp.sort(flat)[::-1]
+    return sorted_desc[k]
+
+
+def detect_batch(model: HyperSenseModel, frames: Array, *,
+                 backend: str = "jnp") -> Array:
+    """Vectorized detection over ``(N, H, W)`` frames -> ``(N,)`` bool."""
+    return jax.vmap(lambda f: detect(model, f, backend=backend))(frames)
+
+
+def frame_scores_batch(model: HyperSenseModel, frames: Array,
+                       t_detection: int | None = None, *,
+                       backend: str = "jnp",
+                       sequential: bool = False) -> Array:
+    """Frame-level ROC scores for a batch of frames -> ``(N,)`` float.
+
+    ``sequential=True`` scores frames one jit call at a time — use for
+    large D / many frames, where the vmapped rolled-product intermediate
+    (N x H x W x D) would blow host memory.
+    """
+    td = model.t_detection if t_detection is None else t_detection
+
+    def one(f):
+        return frame_detection_score(
+            score_frame(model, f, backend=backend), td)
+
+    if sequential:
+        one_j = jax.jit(one)
+        return jnp.stack([one_j(f) for f in frames])
+    return jax.vmap(one)(frames)

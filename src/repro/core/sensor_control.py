@@ -1,0 +1,91 @@
+"""Intelligent Sensor Control (paper §III-B, Fig. 3-4).
+
+The control loop: a low-precision always-on path feeds the HDC HyperSense
+model; its frame-level decision gates the high-precision ADC (and everything
+downstream — transmission + cloud model). Generalized here to *compute
+gating*: the "high-precision ADC + cloud model" can be any expensive
+backend, including the LM backbones in ``repro.models``.
+
+``SensorController`` is a small state machine with hysteresis:
+
+* idle: sample at ``base_rate`` (e.g. 1 fps) through the low-precision path
+* when HDC fires: switch the high-precision path on for ``hold`` frames
+  (re-armed on every positive), i.e. the 60 fps burst the paper describes.
+
+``simulate_stream`` replays a recorded/synthetic frame stream through the
+controller and returns per-frame gate decisions + accounting used by the
+energy model (Fig. 17 / Table III).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass
+class ControllerConfig:
+    base_rate_hz: float = 1.0     # low-precision always-on sampling
+    active_rate_hz: float = 60.0  # high-precision burst rate when triggered
+    hold_frames: int = 3          # keep HP path on for this many frames
+                                  # after the last positive (hysteresis)
+
+
+@dataclass
+class StreamStats:
+    decisions: np.ndarray         # bool (N,)  HDC fired per frame
+    gated_on: np.ndarray          # bool (N,)  HP path enabled per frame
+    duty_cycle: float             # fraction of frames HP path was on
+    missed_positive: float        # fraction of object frames with HP off
+    false_active: float           # fraction of empty frames with HP on
+
+
+class SensorController:
+    """Stateful gate. ``step(fired) -> bool`` (is the HP path on?)."""
+
+    def __init__(self, config: ControllerConfig | None = None):
+        self.config = config or ControllerConfig()
+        self._hold = 0
+
+    def reset(self) -> None:
+        self._hold = 0
+
+    def step(self, fired: bool) -> bool:
+        if fired:
+            self._hold = self.config.hold_frames
+            return True
+        if self._hold > 0:
+            self._hold -= 1
+            return True
+        return False
+
+
+def simulate_stream(decide: Callable[[np.ndarray], bool],
+                    frames: np.ndarray, labels: np.ndarray,
+                    config: ControllerConfig | None = None) -> StreamStats:
+    """Run the controller over a frame stream.
+
+    Args:
+      decide: frame -> bool, the HyperSense detection (low-precision path).
+      frames: (N, H, W) low-precision frames.
+      labels: (N,) bool, ground-truth object presence.
+    """
+    ctrl = SensorController(config)
+    n = len(frames)
+    decisions = np.zeros(n, dtype=bool)
+    gated = np.zeros(n, dtype=bool)
+    for i in range(n):
+        decisions[i] = bool(decide(frames[i]))
+        gated[i] = ctrl.step(decisions[i])
+    labels = np.asarray(labels).astype(bool)
+    pos = max(int(labels.sum()), 1)
+    neg = max(int((~labels).sum()), 1)
+    return StreamStats(
+        decisions=decisions,
+        gated_on=gated,
+        duty_cycle=float(gated.mean()),
+        missed_positive=float((labels & ~gated).sum() / pos),
+        false_active=float((~labels & gated).sum() / neg),
+    )

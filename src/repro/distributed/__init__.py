@@ -1,0 +1,3 @@
+"""Distribution: logical-axis sharding rules, mesh helpers."""
+
+from repro.distributed import sharding  # noqa: F401

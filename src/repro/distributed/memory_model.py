@@ -1,0 +1,146 @@
+"""Analytic per-device memory model (companion to memory_analysis()).
+
+XLA:CPU's buffer assignment overestimates the TPU-resident peak (no
+bf16-native dynamic-update-slice, weaker fusion, looser liveness — see
+EXPERIMENTS.md §Dry-run caveats), so the fit-proof combines the compiled
+``memory_analysis()`` with this analytic model computed from the *actual
+shardings* the cell lowers with:
+
+train:   params(fp32) + adam(mu,nu fp32) + grads(fp32, transient)
+         + saved residuals (L x b_loc x s_shard x d, bf16, seq-parallel)
+         + max transient (attention block scores / MoE buffers / loss chunk)
+decode:  params(bf16-equivalent) + decode state + small transients
+prefill: params + live activations (one layer) + logits
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.distributed import sharding as shlib
+from repro.models import common, lm
+
+
+def _shards(mesh, spec) -> int:
+    n = 1
+    flat = []
+    for p in spec:
+        if p is None:
+            continue
+        if isinstance(p, (tuple, list)):
+            flat.extend(p)
+        else:
+            flat.append(p)
+    for ax in flat:
+        n *= mesh.shape[ax]
+    return n
+
+
+def _tree_bytes_per_device(spec_tree, mesh, rules, bytes_per_el: int) -> int:
+    total = 0
+    leaves = jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, common.P))
+    for p in leaves:
+        sh = shlib.spec_for(p.shape, p.axes, mesh, rules)
+        total += math.prod(p.shape) * bytes_per_el // _shards(mesh, sh)
+    return total
+
+
+@dataclass
+class MemoryBreakdown:
+    params_gb: float
+    opt_state_gb: float
+    grads_gb: float
+    residuals_gb: float
+    transient_gb: float
+    state_gb: float = 0.0
+    detail: dict = field(default_factory=dict)
+
+    @property
+    def total_gb(self) -> float:
+        return (self.params_gb + self.opt_state_gb + self.grads_gb
+                + self.residuals_gb + self.transient_gb + self.state_gb)
+
+    @property
+    def fits_v5e(self) -> bool:
+        return self.total_gb <= 16.0
+
+
+def analyze(cfg, shape, mesh, rules=None) -> MemoryBreakdown:
+    model = lm.build(cfg)
+    spec = model.spec()
+    rules = dict(shlib.DEFAULT_RULES, **(rules or {}))
+
+    mesh_axes = mesh.shape
+    model_deg = mesh_axes.get("model", 1)
+    data_deg = mesh_axes.get("data", 1) * mesh_axes.get("pod", 1)
+
+    p32 = _tree_bytes_per_device(spec, mesh, rules, 4)
+    b = shape.global_batch
+    s = shape.seq_len
+    d = cfg.d_model
+    b_loc = max(b // data_deg, 1)
+
+    if shape.kind == "train":
+        params = p32
+        opt = 2 * p32
+        grads = p32
+        s_shard = max(s // model_deg, 1) if s % model_deg == 0 else s
+        resid = cfg.n_layers * b_loc * s_shard * d * 2
+        h_loc = max(cfg.n_heads // model_deg, 1)
+        qc = min(1024, s)
+        attn_t = 2 * b_loc * h_loc * qc * s * 4          # scores + attn
+        v_loc = max(cfg.vocab // model_deg, 1) if cfg.vocab % model_deg == 0 \
+            else cfg.vocab
+        loss_t = 3 * b_loc * min(1024, s) * v_loc * 4
+        moe_t = 0
+        if cfg.n_experts:
+            n_tok = b_loc * s
+            cap = int(n_tok * cfg.top_k * cfg.capacity_factor
+                      / cfg.n_experts)
+            e_loc = max(cfg.n_experts // model_deg, 1) \
+                if cfg.n_experts % model_deg == 0 else cfg.n_experts
+            cap_loc = cap if cfg.n_experts % model_deg == 0 \
+                else max(cap // model_deg, 1)
+            moe_t = 3 * e_loc * cap_loc * max(cfg.d_ff, d) * 2
+        transient = max(attn_t, loss_t, moe_t) + 2 * b_loc * s * d * 2
+        return MemoryBreakdown(
+            params_gb=params / 1e9, opt_state_gb=opt / 1e9,
+            grads_gb=grads / 1e9, residuals_gb=resid / 1e9,
+            transient_gb=transient / 1e9,
+            detail={"attn_t_gb": attn_t / 1e9, "loss_t_gb": loss_t / 1e9,
+                    "moe_t_gb": moe_t / 1e9})
+
+    # inference: bf16-weights footprint
+    params = p32 // 2
+    state_bytes = 0
+    if shape.kind == "decode":
+        st_spec = model.decode_state_spec(batch=b, max_seq=s)
+        from repro.launch.steps import _decode_state_axes
+        axes = _decode_state_axes(model)
+        def is_axes(x):
+            return (isinstance(x, tuple)
+                    and all(a is None or isinstance(a, str) for a in x))
+
+        flat_s = jax.tree.leaves(
+            st_spec, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        flat_a = jax.tree.leaves(axes, is_leaf=is_axes)
+        for sds, ax in zip(flat_s, flat_a):
+            sh = shlib.spec_for(sds.shape, tuple(ax), mesh, rules)
+            state_bytes += (math.prod(sds.shape) * sds.dtype.itemsize
+                            // _shards(mesh, sh))
+        transient = b_loc * d * 4 * 8
+    else:  # prefill
+        transient = (2 * b_loc * s * d * 2
+                     + b_loc * max(cfg.n_heads // model_deg, 1)
+                     * min(1024, s) * s * 4)
+        v_loc = max(cfg.vocab // model_deg, 1) \
+            if cfg.vocab % model_deg == 0 else cfg.vocab
+        transient += b_loc * s * v_loc * 2     # output logits
+    return MemoryBreakdown(
+        params_gb=params / 1e9, opt_state_gb=0.0, grads_gb=0.0,
+        residuals_gb=0.0, transient_gb=transient / 1e9,
+        state_gb=state_bytes / 1e9)

@@ -1,0 +1,184 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §6).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+
+* FLOPs / bytes: ``compiled.cost_analysis()``
+* collective bytes: parsed from the optimized HLO text — sum of operand
+  sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute ops (cost_analysis does not report them).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import asdict, dataclass, field
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (per direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+#: ops counted as inter-chip collectives
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,1024]' -> bytes. '(bf16[..], f32[..])' -> sum."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Uses the *output* shape of each collective instruction (the payload
+    that crosses the interconnect at least once); returns per-op totals.
+    """
+    out: dict[str, int] = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "  name = bf16[...]{...} all-reduce(...)", possibly "-start"
+        m = re.match(r"^[%\w.\-]+ = (.+?) ([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        base = opname.removesuffix("-start")
+        if base in _COLL_OPS:
+            out[base] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float            # total across chips (cost_analysis)
+    hlo_gbytes: float
+    coll_gbytes: float
+    coll_breakdown: dict = field(default_factory=dict)
+    model_gflops: float = 0.0    # 6*N*D useful flops
+    per_device_peak_mem_gb: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_gflops * 1e9 / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_gbytes * 1e9 / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # coll_gbytes is the PER-DEVICE payload (HLO shapes of a GSPMD
+        # module are per-partition); one ICI link, conservative (v5e has
+        # 4 links/chip; ring collectives can use 2+ concurrently).
+        return self.coll_gbytes * 1e9 / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return (self.model_gflops / self.hlo_gflops) if self.hlo_gflops \
+            else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """T_compute / max-term: 1.0 = compute-bound at peak."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / t if t else 0.0
+
+    @property
+    def model_roofline_fraction(self) -> float:
+        """Useful-FLOPs roofline fraction (penalizes remat/redundancy):
+        time at peak for MODEL_FLOPS / dominant term."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        t_model = self.model_gflops * 1e9 / (self.chips * PEAK_FLOPS)
+        return t_model / t if t else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flop_ratio=self.useful_flop_ratio,
+                 roofline_fraction=self.roofline_fraction,
+                 model_roofline_fraction=self.model_roofline_fraction)
+        return d
+
+
+def model_flops(cfg, shape, n_params: int) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful training FLOPs; forward
+    only (2*N*D) for prefill; 2*N_active per token for decode."""
+    tokens = shape.global_batch * shape.seq_len
+    n_active = active_params(cfg, n_params)
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg, n_params: int) -> float:
+    """Parameters touched per token (MoE: top_k of n_experts)."""
+    if not cfg.n_experts:
+        return float(n_params)
+    # expert weights fraction: 3 matrices of (d_model x d_ff) per expert
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    expert_total = cfg.n_layers * cfg.n_experts * per_expert
+    non_expert = n_params - expert_total
+    return float(non_expert + cfg.n_layers * cfg.top_k * per_expert)
+
+
+def from_compiled(compiled, *, arch: str, shape, mesh_name: str,
+                  chips: int, cfg=None, n_params: int = 0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    # cost_analysis of a GSPMD-partitioned module is PER DEVICE (verified
+    # against a hand-counted sharded matmul); scale to global totals.
+    # Caveat: while-loop bodies are counted ONCE, so roofline cells are
+    # lowered with scan_layers=False (see launch/dryrun.py --unroll).
+    flops = float(cost.get("flops", 0.0)) * chips
+    byts = float(cost.get("bytes accessed", 0.0)) * chips
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    peak = getattr(mem, "peak_memory_in_bytes", 0) or (
+        getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0))
+    mf = model_flops(cfg, shape, n_params) if cfg is not None else 0.0
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=byts / 1e9,
+        coll_gbytes=sum(coll.values()) / 1e9,
+        coll_breakdown={k: v / 1e9 for k, v in coll.items() if v},
+        model_gflops=mf / 1e9,
+        per_device_peak_mem_gb=peak / 1e9,
+    )

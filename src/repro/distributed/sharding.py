@@ -1,0 +1,172 @@
+"""Logical-axis sharding (MaxText-style rules; DESIGN.md §5).
+
+Every parameter/activation dimension carries a *logical* name ("embed",
+"mlp", "heads", "act_batch", ...). A rules table maps logical names to mesh
+axes. Hillclimbing a sharding = editing rules, never editing models.
+
+Usage::
+
+    with use_mesh(mesh, rules):
+        y = model.apply(params, x)   # shard(...) constraints activate
+
+Outside a mesh context every helper is a no-op, so single-device smoke
+tests run the exact same model code.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+# Default rules for the production meshes (("pod",) "data", "model").
+# Weights: TP dims over "model", FSDP dim over "data".
+# Activations: batch over ("pod","data"); TP'd feature dims over "model".
+DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
+    # --- weight dims ---
+    "embed": ("pod", "data"),    # FSDP/ZeRO-3: gathered per-layer under
+                                 # scan; spans pods on the multi-pod mesh
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qkv_dim": None,
+    "head_dim": None,
+    "vocab": ("model",),
+    "expert": ("model",),        # expert parallelism
+    "expert_mlp": ("model",),    # fallback when n_experts can't take it
+                                 # (e.g. grok's 8 experts on a 16-wide axis)
+    "ssm_inner": ("model",),
+    "ssm_state": None,
+    "ssm_heads": ("model",),
+    "conv_dim": ("model",),
+    "conv_k": None,
+    "layers": None,              # scan axis — never sharded
+    "norm": None,
+    # --- activation dims ---
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    # Megatron-style sequence parallelism for the residual stream: layer
+    # boundaries (= the per-layer remat checkpoints under scan) are sharded
+    # along sequence over "model", shrinking saved residuals by the TP
+    # degree. XLA inserts the all-gather at attention/MLP entry — same
+    # volume as the TP all-reduce it replaces.
+    "act_resid_seq": ("model",),
+    "cache_seq": ("model",),     # used only when kv_heads can't take "model"
+    "act_expert_cap": ("model",),  # MoE buffer cap dim when experts can't
+    "act_embed": None,
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_expert": ("model",),
+    "act_ssm_heads": ("model",),
+    "act_state": None,
+}
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None):
+    """Activate a mesh + rules for ``shard``/``logical_sharding`` calls."""
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, dict(DEFAULT_RULES, **(rules or {})))
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.state = prev
+
+
+def current_mesh() -> Mesh | None:
+    state = getattr(_CTX, "state", None)
+    return state[0] if state else None
+
+
+def current_rules() -> dict:
+    state = getattr(_CTX, "state", None)
+    return state[1] if state else dict(DEFAULT_RULES)
+
+
+def _axis_for(logical: str | None, rules: dict, mesh: Mesh,
+              dim_size: int, taken: set) -> tuple[str, ...] | None:
+    """Resolve one logical dim -> mesh axes, dropping non-divisible or
+    already-used mesh axes (keeps heterogeneous configs lowering)."""
+    if logical is None:
+        return None
+    mapped = rules.get(logical)
+    if mapped is None:
+        return None
+    if isinstance(mapped, str):
+        mapped = (mapped,)
+    out = []
+    prod = 1
+    for ax in mapped:
+        if ax not in mesh.shape or ax in taken:
+            continue
+        n = mesh.shape[ax]
+        if dim_size % (prod * n) != 0:
+            continue
+        out.append(ax)
+        prod *= n
+    return tuple(out) or None
+
+
+#: logical names that claim mesh axes BEFORE fallback dims (e.g. the KV-head
+#: dim outranks "cache_seq"; the expert dim outranks "act_expert_cap") —
+#: fallbacks only shard when the preferred dim couldn't (non-divisible).
+PRIORITY_NAMES = ("act_kv_heads", "act_heads", "act_expert", "expert",
+                  "kv_heads", "heads", "act_ssm_heads")
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[str | None],
+             mesh: Mesh | None = None, rules: dict | None = None) -> P:
+    """PartitionSpec for an array of ``shape`` with logical ``axes``.
+
+    Two-pass resolution: priority names first (so e.g. "act_kv_heads"
+    claims "model" when divisible), then the remaining dims in order.
+    """
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    assert len(shape) == len(axes), (shape, axes)
+    if mesh is None:
+        return P()
+    taken: set = set()
+    parts: list = [None] * len(shape)
+
+    def passes():
+        for i, (size, name) in enumerate(zip(shape, axes)):
+            if name in PRIORITY_NAMES:
+                yield i, size, name
+        for i, (size, name) in enumerate(zip(shape, axes)):
+            if name not in PRIORITY_NAMES:
+                yield i, size, name
+
+    for i, size, name in passes():
+        resolved = _axis_for(name, rules, mesh, size, taken)
+        if resolved:
+            taken.update(resolved)
+            parts[i] = resolved if len(resolved) > 1 else resolved[0]
+    return P(*parts)
+
+
+def logical_sharding(shape: Sequence[int], axes: Sequence[str | None],
+                     mesh: Mesh | None = None,
+                     rules: dict | None = None) -> NamedSharding | None:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names (no-op w/o mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sh = logical_sharding(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,74 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Auto-selects ``interpret=True`` on non-TPU backends so the same call sites
+work on CPU (validation) and TPU (deployment). Also hosts the per-model
+precompute cache used by the HyperSense scoring hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import NonLin
+from repro.kernels import hdc_encode as _enc
+from repro.kernels import similarity as _sim
+from repro.kernels import sliding_scores as _ss
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hdc_encode(x: Array, B: Array, b: Array, *,
+               nonlinearity: NonLin = "rff", normalize: bool = True,
+               block_n: int = 128, block_d: int = 512,
+               block_k: int = 512) -> Array:
+    """Fused normalize + project + RFF nonlinearity (kernel-backed)."""
+    if x.ndim > 2:
+        x = x.reshape(x.shape[0], -1)
+    if normalize:
+        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
+    return _enc.hdc_encode(x, B, b, nonlinearity=nonlinearity,
+                           block_n=block_n, block_d=block_d,
+                           block_k=block_k, interpret=_interpret())
+
+
+def similarity(queries: Array, class_hvs: Array, *, block_n: int = 256,
+               block_d: int = 1024) -> Array:
+    """Fused cosine class scores (kernel-backed)."""
+    return _sim.similarity(queries, class_hvs, block_n=block_n,
+                           block_d=block_d, interpret=_interpret())
+
+
+precompute_tiles = _ss.precompute_tiles
+ScoreTiles = _ss.ScoreTiles
+
+
+@functools.lru_cache(maxsize=8)
+def _cached_tiles(key):  # pragma: no cover - trivial cache shim
+    raise RuntimeError("use fragment_score_map / precompute_tiles directly")
+
+
+def fragment_score_map(frame: Array, class_hvs: Array, B0: Array, b: Array,
+                       *, h: int, w: int, stride: int,
+                       nonlinearity: NonLin = "rff",
+                       tiles: _ss.ScoreTiles | None = None,
+                       block_d: int = 512) -> Array:
+    """Frame -> (my, mx) detection-score map via the reuse kernel.
+
+    For repeated calls, precompute ``tiles`` once with
+    :func:`precompute_tiles` and pass it in (the per-model rotation
+    precompute is the whole point of the unrolled-orientation trick).
+    """
+    W = frame.shape[-1]
+    if tiles is None:
+        tiles = _ss.precompute_tiles(B0, b, class_hvs, W=W, w=w,
+                                     stride=stride, block_d=block_d)
+    return _ss.fragment_scores(frame, tiles, h=h, w=w, stride=stride,
+                               nonlinearity=nonlinearity,
+                               interpret=_interpret())

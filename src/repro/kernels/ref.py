@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernel tests
+``assert_allclose`` against (shape/dtype sweeps in
+``tests/test_kernels.py``). They are *intentionally* the slow/clear
+formulation — no reuse tricks — so a kernel bug cannot hide in a shared
+shortcut.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core.encoding import NonLin
+
+Array = jnp.ndarray
+
+
+def hdc_encode(x: Array, B: Array, b: Array,
+               nonlinearity: NonLin = "rff") -> Array:
+    """(N, n) @ (n, D) + fused nonlinearity -> (N, D). No normalization."""
+    proj = x.astype(jnp.float32) @ B.astype(jnp.float32)
+    return encoding.apply_nonlinearity(proj, b.astype(jnp.float32),
+                                       nonlinearity)
+
+
+def similarity(queries: Array, class_hvs: Array, eps: float = 1e-9) -> Array:
+    """Cosine class scores: (N, D), (C, D) -> (N, C)."""
+    q = queries.astype(jnp.float32)
+    c = class_hvs.astype(jnp.float32)
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), eps)
+    cn = c / jnp.maximum(jnp.linalg.norm(c, axis=-1, keepdims=True), eps)
+    return qn @ cn.T
+
+
+def fragment_scores(frame: Array, class_hvs: Array, B0: Array, b: Array, *,
+                    h: int, w: int, stride: int,
+                    nonlinearity: NonLin = "rff") -> Array:
+    """Frame -> (my, mx) fragment detection-score map.
+
+    Oracle = naive sliding encode (materialize every fragment, encode
+    against the materialized permutation base) + cosine classifier;
+    score = sim(positive) - sim(negative).
+    """
+    hv = encoding.encode_frame_naive(
+        frame.astype(jnp.float32), B0.astype(jnp.float32),
+        b.astype(jnp.float32), h=h, w=w, stride=stride,
+        nonlinearity=nonlinearity, normalize=True)          # (my, mx, D)
+    my, mx, dim = hv.shape
+    s = similarity(hv.reshape(my * mx, dim), class_hvs)
+    s = s[:, 1] - s[:, 0]
+    return s.reshape(my, mx)

@@ -1,0 +1,224 @@
+"""Pallas TPU kernel: fused computation-reuse HyperSense frame scoring.
+
+This is the paper's FPGA accelerator (§IV) adapted to TPU (DESIGN.md §3).
+One kernel maps a sensor frame directly to the fragment score map:
+
+  frame (H, W)  ->  scores-ingredients (my, mx) x 3
+
+fusing, per grid cell:
+
+  1. *rolled products + prefix sum* — each input element is multiplied with
+     base-hypervector material exactly once per base row (the paper's
+     computation reuse; the systolic FIFO becomes a running sum),
+  2. *window differences* — every fragment's projection is
+     ``P[kx+w] - P[kx]`` (the reuse of overlapping fragments),
+  3. *normalization + RFF nonlinearity* — in the *unrolled* orientation:
+     instead of cyclically rotating every (mx, D) projection back (the
+     naive inverse of the permutation trick), the per-column *bias* and
+     *class hypervectors* are pre-rotated once per model. A (D,)-vector
+     rotation per fragment column, amortized over every frame forever,
+     replaces an (mx, D) data rotation per frame — a beyond-paper
+     optimization available because similarity is permutation-invariant.
+  4. *classifier dot products* — positive/negative class dots and the query
+     sum-of-squares accumulate across D tiles; the cosine epilogue runs
+     host-side on the tiny (my, mx) outputs.
+
+Grid: ``(my, n_dt)`` — fragment rows parallel, hyperdimension tiles as the
+sequential reduction. VMEM per step: slab (h, TD+W) + bias/class tiles
+(mx, TD) + P scratch (W+1, TD) + acc (mx, TD).
+
+Precomputation (once per model, host-side): circularly padded base slabs
+and pre-rotated bias/class tiles — see :func:`precompute_tiles`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.encoding import SHIFT, NonLin
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScoreTiles:
+    """Per-model precomputed kernel inputs (see module docstring)."""
+    slabs: Array      # (n_dt, h, TD + W - 1) circularly padded base rows
+    bias_t: Array     # (n_dt, mx, TD) pre-rotated RFF bias tiles
+    cpos_t: Array     # (n_dt, mx, TD) pre-rotated positive class tiles
+    cneg_t: Array     # (n_dt, mx, TD) pre-rotated negative class tiles
+    cpos_norm: Array  # () L2 of positive class hypervector
+    cneg_norm: Array  # () L2 of negative class hypervector
+    block_d: int = dataclasses.field(metadata={"static": True})
+    w: int = dataclasses.field(metadata={"static": True})
+    stride: int = dataclasses.field(metadata={"static": True})
+
+
+def precompute_tiles(B0: Array, b: Array, class_hvs: Array, *, W: int,
+                     w: int, stride: int, block_d: int = 512) -> ScoreTiles:
+    """Host-side, once per (model, frame-width): slabs + rotated tiles."""
+    h, dim = B0.shape
+    assert SHIFT == -1, "precompute assumes the paper's left-shift"
+    td = block_d if dim % block_d == 0 else dim
+    n_dt = dim // td
+    mx = (W - w) // stride + 1
+
+    pad = td + W - 1
+    B0P = jnp.concatenate([B0, B0[:, :pad]], axis=1)
+    slabs = jnp.stack([B0P[:, dt * td: dt * td + pad]
+                       for dt in range(n_dt)])               # (n_dt,h,TD+W-1)
+
+    # idx[dt, kx, j] = (dt*TD + j + kx*stride) % D   (rotation by fragment col)
+    dts = jnp.arange(n_dt)[:, None, None] * td
+    kxs = jnp.arange(mx)[None, :, None] * stride
+    js = jnp.arange(td)[None, None, :]
+    idx = (dts + js + kxs) % dim                            # (n_dt, mx, TD)
+    return ScoreTiles(
+        slabs=slabs.astype(jnp.float32),
+        bias_t=b[idx].astype(jnp.float32),
+        cpos_t=class_hvs[1][idx].astype(jnp.float32),
+        cneg_t=class_hvs[0][idx].astype(jnp.float32),
+        cpos_norm=jnp.linalg.norm(class_hvs[1].astype(jnp.float32)),
+        cneg_norm=jnp.linalg.norm(class_hvs[0].astype(jnp.float32)),
+        block_d=td,
+        w=w,
+        stride=stride,
+    )
+
+
+def window_norms(frame: Array, h: int, w: int, stride: int) -> Array:
+    """(my, mx) L2 norms of every sliding window via a summed-area table."""
+    H, W = frame.shape
+    my = (H - h) // stride + 1
+    mx = (W - w) // stride + 1
+    f = frame.astype(jnp.float32)
+    sq = jnp.cumsum(jnp.cumsum(f * f, axis=0), axis=1)
+    sq = jnp.pad(sq, ((1, 0), (1, 0)))
+    ky = jnp.arange(my) * stride
+    kx = jnp.arange(mx) * stride
+    win = (sq[ky[:, None] + h, kx[None, :] + w]
+           - sq[ky[:, None] + h, kx[None, :]]
+           - sq[ky[:, None], kx[None, :] + w]
+           + sq[ky[:, None], kx[None, :]])
+    return jnp.sqrt(jnp.maximum(win, 1e-16))
+
+
+def _score_kernel(frame_ref, slab_ref, bias_ref, cpos_ref, cneg_ref,
+                  norm_ref, dpos_ref, dneg_ref, qq_ref, p_ref, acc_ref, *,
+                  h: int, w: int, stride: int, W: int, mx: int, td: int,
+                  n_dt: int, nonlinearity: NonLin):
+    ky = pl.program_id(0)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def row_body(r, _):
+        row = frame_ref[pl.ds(ky * stride + r, 1), :]        # (1, W)
+        row = row.astype(jnp.float32)
+        slab = slab_ref[0, pl.ds(r, 1), :][0]
+        slab = slab.astype(jnp.float32)                      # (TD + W - 1,)
+
+        # prefix sum of rolled products (the computation reuse)
+        p_ref[pl.ds(0, 1), :] = jnp.zeros((1, td), jnp.float32)
+
+        def i_body(i, running):
+            seg = jax.lax.dynamic_slice(slab, (i,), (td,))
+            x_i = jax.lax.dynamic_slice(row, (0, i), (1, 1))[0, 0]
+            running = running + x_i * seg
+            p_ref[pl.ds(i + 1, 1), :] = running[None, :]
+            return running
+
+        jax.lax.fori_loop(0, W, i_body, jnp.zeros((td,), jnp.float32))
+
+        # window differences: every fragment reuses the shared prefix sum
+        def k_body(kx, _):
+            lo = p_ref[pl.ds(kx * stride, 1), :]
+            hi = p_ref[pl.ds(kx * stride + w, 1), :]
+            acc_ref[pl.ds(kx, 1), :] = acc_ref[pl.ds(kx, 1), :] + hi - lo
+            return 0
+
+        jax.lax.fori_loop(0, mx, k_body, 0)
+        return 0
+
+    jax.lax.fori_loop(0, h, row_body, 0)
+
+    # normalization + nonlinearity + classifier dots (unrolled orientation)
+    norms = norm_ref[...].astype(jnp.float32)                # (1, mx)
+    s_n = acc_ref[...] / jnp.maximum(norms[0][:, None], 1e-8)
+    bias = bias_ref[0]                                       # (mx, TD)
+    if nonlinearity == "rff":
+        phi = jnp.cos(s_n + bias) * jnp.sin(s_n)
+    elif nonlinearity == "sign":
+        phi = jnp.sign(s_n)
+    else:
+        phi = s_n
+    dpos = jnp.sum(phi * cpos_ref[0], axis=1)[None, :]       # (1, mx)
+    dneg = jnp.sum(phi * cneg_ref[0], axis=1)[None, :]
+    qq = jnp.sum(phi * phi, axis=1)[None, :]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        dpos_ref[...] = jnp.zeros_like(dpos_ref)
+        dneg_ref[...] = jnp.zeros_like(dneg_ref)
+        qq_ref[...] = jnp.zeros_like(qq_ref)
+
+    dpos_ref[...] += dpos
+    dneg_ref[...] += dneg
+    qq_ref[...] += qq
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w", "stride",
+                                             "nonlinearity", "interpret"))
+def fragment_scores(frame: Array, tiles: ScoreTiles, *, h: int, w: int,
+                    stride: int, nonlinearity: NonLin = "rff",
+                    interpret: bool = False) -> Array:
+    """Frame -> (my, mx) fragment score map (sim(pos) - sim(neg))."""
+    H, W = frame.shape
+    my = (H - h) // stride + 1
+    mx = (W - w) // stride + 1
+    n_dt, h_b, slab_len = tiles.slabs.shape
+    td = tiles.block_d
+    assert h_b == h and slab_len == td + W - 1, (tiles.slabs.shape, td, W)
+    assert tiles.w == w and tiles.stride == stride
+
+    norms = window_norms(frame, h, w, stride)                # (my, mx)
+
+    kern = functools.partial(
+        _score_kernel, h=h, w=w, stride=stride, W=W, mx=mx, td=td,
+        n_dt=n_dt, nonlinearity=nonlinearity)
+
+    dpos, dneg, qq = pl.pallas_call(
+        kern,
+        grid=(my, n_dt),
+        in_specs=[
+            pl.BlockSpec((H, W), lambda i, j: (0, 0)),           # frame
+            pl.BlockSpec((1, h, slab_len), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, mx, td), lambda i, j: (j, 0, 0)),   # bias
+            pl.BlockSpec((1, mx, td), lambda i, j: (j, 0, 0)),   # cpos
+            pl.BlockSpec((1, mx, td), lambda i, j: (j, 0, 0)),   # cneg
+            pl.BlockSpec((1, mx), lambda i, j: (i, 0)),          # norms
+        ],
+        out_specs=[
+            pl.BlockSpec((1, mx), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, mx), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, mx), lambda i, j: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((my, mx), jnp.float32)] * 3,
+        scratch_shapes=[
+            pltpu.VMEM((W + 1, td), jnp.float32),
+            pltpu.VMEM((mx, td), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(frame, tiles.slabs, tiles.bias_t, tiles.cpos_t, tiles.cneg_t, norms)
+
+    qn = jnp.maximum(jnp.sqrt(qq), 1e-9)
+    return (dpos / (qn * jnp.maximum(tiles.cpos_norm, 1e-9))
+            - dneg / (qn * jnp.maximum(tiles.cneg_norm, 1e-9)))

@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 host-platform placeholder devices.
+
+Per cell:
+  * build the step function + shardings (repro.launch.steps)
+  * ``jax.jit(step, in_shardings, out_shardings).lower(*specs).compile()``
+  * print ``compiled.memory_analysis()`` (proves it fits) and
+    ``cost_analysis()`` (FLOPs/bytes for the roofline)
+  * append the roofline record to ``--out`` (JSON lines)
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every runnable cell
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.base import applicable_shapes
+from repro.distributed import roofline as rl
+from repro.distributed import sharding as shlib
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import common, lm
+
+
+def mesh_for(name: str):
+    return make_production_mesh(multi_pod=(name == "multi"))
+
+
+# --------------------------------------------------------------------------
+# Roofline mode: two-point layer scaling.
+#
+# HLO cost analysis counts while-loop bodies once, and fully-unrolled
+# 95-layer stacks don't compile in reasonable time on this 1-core host.
+# Layer stacks are homogeneous, so costs are affine in depth:
+#     C(L) = fixed + L * per_layer
+# Lower UNROLLED at two small depths (L1 < L2, chosen to preserve the
+# block mix for hybrid/ssm archs), solve for (fixed, per_layer), and
+# extrapolate to the full depth. Exact for FLOPs/bytes/collectives of
+# homogeneous stacks; memory comes from the production (scan) lowering.
+# --------------------------------------------------------------------------
+
+def _probe_depths(cfg) -> tuple[int, int]:
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        return k, 2 * k              # 1 and 2 shared-block invocations
+    if cfg.family == "ssm" and cfg.slstm_every:
+        k = cfg.slstm_every
+        return k, 2 * k              # 1 and 2 sLSTM blocks
+    return 2, 4
+
+
+def _compile_cell(cfg, shape, mesh, rules):
+    with shlib.use_mesh(mesh, rules):
+        cell = steps.build_cell(cfg, shape, mesh, rules)
+        jitted = jax.jit(cell.step_fn,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        return jitted.lower(*cell.abstract_args).compile()
+
+
+def run_cell_roofline(arch: str, shape_name: str, mesh_name: str = "single",
+                      rules: dict | None = None,
+                      out_path: str | None = None,
+                      verbose: bool = True,
+                      overrides: dict | None = None) -> dict:
+    cfg = configs.get_config(arch).replace(scan_layers=False,
+                                           **(overrides or {}))
+    shape = configs.SHAPES[shape_name]
+    mesh = mesh_for(mesh_name)
+    chips = mesh.devices.size
+    l_full = cfg.n_layers
+    l1, l2 = _probe_depths(cfg)
+
+    t0 = time.time()
+    probes = {}
+    for li in (l1, l2):
+        compiled = _compile_cell(cfg.replace(n_layers=li), shape, mesh,
+                                 rules)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = rl.collective_bytes(compiled.as_text())
+        probes[li] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll,
+        }
+
+    def affine(key):
+        per_layer = (probes[l2][key] - probes[l1][key]) / (l2 - l1)
+        fixed = probes[l1][key] - l1 * per_layer
+        return fixed + l_full * per_layer
+
+    coll_full = {}
+    for op in set(probes[l1]["coll"]) | set(probes[l2]["coll"]):
+        pl_ = (probes[l2]["coll"].get(op, 0)
+               - probes[l1]["coll"].get(op, 0)) / (l2 - l1)
+        coll_full[op] = max(0.0, probes[l1]["coll"].get(op, 0)
+                            - l1 * pl_ + l_full * pl_)
+
+    n_params = common.spec_param_count(lm.build(configs.get_config(arch)
+                                                ).spec())
+    rec = rl.Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_gflops=affine("flops") * chips / 1e9,
+        hlo_gbytes=affine("bytes") * chips / 1e9,
+        coll_gbytes=sum(coll_full.values()) / 1e9,
+        coll_breakdown={k: v / 1e9 for k, v in coll_full.items() if v},
+        model_gflops=rl.model_flops(cfg, shape, n_params) / 1e9,
+    ).to_dict()
+    rec.update(n_params=n_params, status="ok", mode="roofline",
+               probe_depths=[l1, l2], total_s=round(time.time() - t0, 1))
+    if verbose:
+        print(f"=== ROOFLINE {arch} x {shape_name} x {mesh_name} "
+              f"(probes L={l1},{l2} -> {l_full}) ===")
+        print("terms (s): compute=%.4f memory=%.4f collective=%.4f -> %s"
+              % (rec["t_compute"], rec["t_memory"], rec["t_collective"],
+                 rec["bottleneck"]))
+        print("roofline fraction=%.3f useful-flop ratio=%.3f  (%.0fs)" % (
+            rec["roofline_fraction"], rec["useful_flop_ratio"],
+            rec["total_s"]))
+        print("collectives (GB/device):", rec["coll_breakdown"])
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             rules: dict | None = None, out_path: str | None = None,
+             verbose: bool = True, unroll: bool = False) -> dict:
+    cfg = configs.get_config(arch)
+    if unroll:
+        # roofline-accurate lowering: HLO cost analysis counts while-loop
+        # bodies once, so the roofline table is derived from python-loop
+        # (unrolled) layer stacks; the production (scan) lowering is what
+        # the plain dry-run compiles.
+        cfg = cfg.replace(scan_layers=False)
+    shape = configs.SHAPES[shape_name]
+    mesh = mesh_for(mesh_name)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    with shlib.use_mesh(mesh, rules):
+        cell = steps.build_cell(cfg, shape, mesh, rules)
+        jitted = jax.jit(cell.step_fn,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    n_params = common.spec_param_count(lm.build(cfg).spec())
+    rec = rl.from_compiled(compiled, arch=arch, shape=shape,
+                           mesh_name=mesh_name, chips=chips, cfg=cfg,
+                           n_params=n_params).to_dict()
+    rec.update(n_params=n_params, lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), status="ok",
+               unrolled=unroll)
+
+    if verbose:
+        print(f"=== {arch} x {shape_name} x {mesh_name} "
+              f"({chips} chips) ===")
+        print(f"params: {n_params/1e9:.2f}B  "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        print("memory_analysis:", mem)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            cost.get("flops", 0), cost.get("bytes accessed", 0)))
+        print("collectives (GB):", rec["coll_breakdown"])
+        print("terms (s): compute=%.4f memory=%.4f collective=%.4f -> %s"
+              % (rec["t_compute"], rec["t_memory"], rec["t_collective"],
+                 rec["bottleneck"]))
+        print("roofline fraction=%.3f useful-flop ratio=%.3f" % (
+            rec["roofline_fraction"], rec["useful_flop_ratio"]))
+
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def all_cells(mesh_names=("single", "multi")):
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        shapes = applicable_shapes(cfg)
+        for shape_name, sc in shapes.items():
+            if sc is None:
+                continue
+            for mesh_name in mesh_names:
+                yield arch, shape_name, mesh_name
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--rules", default=None,
+                    help="JSON dict of sharding-rule overrides")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer stacks for loop-exact cost analysis")
+    ap.add_argument("--roofline", action="store_true",
+                    help="two-point layer-scaled roofline analysis")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig field overrides")
+    args = ap.parse_args()
+    rules = json.loads(args.rules) if args.rules else None
+
+    if args.all:
+        failures = []
+        meshes = ("single",) if args.roofline else ("single", "multi")
+        for arch, shape_name, mesh_name in all_cells(meshes):
+            try:
+                if args.roofline:
+                    run_cell_roofline(arch, shape_name, mesh_name, rules,
+                                      args.out)
+                else:
+                    run_cell(arch, shape_name, mesh_name, rules, args.out,
+                             unroll=args.unroll)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape_name, mesh_name, str(e)))
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps({
+                            "arch": arch, "shape": shape_name,
+                            "mesh": mesh_name, "status": "fail",
+                            "error": str(e)[:500]}) + "\n")
+        print(f"\n{len(failures)} failures")
+        for f_ in failures:
+            print("FAIL:", f_)
+        return 1 if failures else 0
+
+    if args.roofline:
+        run_cell_roofline(args.arch, args.shape, args.mesh, rules, args.out,
+                          overrides=json.loads(args.override)
+                          if args.override else None)
+    else:
+        run_cell(args.arch, args.shape, args.mesh, rules, args.out,
+                 unroll=args.unroll)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

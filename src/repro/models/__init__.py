@@ -1,0 +1,10 @@
+"""Model zoo: every assigned architecture as composable JAX modules."""
+
+from repro.models import (  # noqa: F401
+    attention,
+    common,
+    lm,
+    mlp,
+    ssm,
+    xlstm,
+)

@@ -1,0 +1,228 @@
+"""Mamba-2 (SSD) blocks: chunked train/prefill scan + single-step decode.
+
+Follows the SSD formulation of Mamba-2 [arXiv:2405.21060] (the
+``ssd_minimal`` reference): within-chunk quadratic form + inter-chunk
+recurrent state passing, implemented with ``jax.lax`` scans so the lowered
+HLO stays compact for 38-95 layer stacks.
+
+Sharding: the inner dim ("ssm_inner") and heads shard over "model";
+the recurrent state (b, h, p, n) shards batch over ("pod","data") and
+heads over "model".
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import common
+from repro.models.common import P
+
+Array = jax.Array
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int         # = expand * d_model (Mamba2 default expand=2)
+    n_heads: int         # d_inner // head_dim
+    head_dim: int
+    d_state: int
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+
+
+def spec(cfg: SSMConfig) -> dict:
+    d, di, h, n, g = (cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.d_state,
+                      cfg.n_groups)
+    conv_dim = di + 2 * g * n
+    d_in_proj = 2 * di + 2 * g * n + h
+    return {
+        "in_proj": P((d, d_in_proj), ("embed", "ssm_inner")),
+        "conv_w": P((cfg.d_conv, conv_dim), ("conv_k", "conv_dim")),
+        "conv_b": P((conv_dim,), ("conv_dim",), "zeros"),
+        "A_log": P((h,), ("ssm_heads",), "zeros"),
+        "D": P((h,), ("ssm_heads",), "ones"),
+        "dt_bias": P((h,), ("ssm_heads",), "zeros"),
+        "norm": {"scale": P((di,), ("norm",), "ones")},
+        "out_proj": P((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(zxbcdt: Array, cfg: SSMConfig):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, xs, B, C, dt
+
+
+def _segsum(x: Array) -> Array:
+    """(..., q) -> (..., q, q) lower-triangular segment sums."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int) -> tuple[Array, Array]:
+    """SSD scan: returns (y, final_state).
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) negative;
+    B, C: (b, s, g, n). s must be a multiple of ``chunk``.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    rep = h // g
+
+    xd = (x * dt[..., None]).astype(jnp.float32)             # discretized
+    dA = (dt * A).astype(jnp.float32)                        # (b, s, h)
+
+    def ch(t):  # (b, s, ...) -> (b, c, q, ...)
+        return t.reshape(b, c, chunk, *t.shape[2:])
+
+    xc, dAc = ch(xd), ch(dA)                                 # (b,c,q,h,p)
+    Bc = jnp.repeat(ch(B.astype(jnp.float32)), rep, axis=3)  # (b,c,q,h,n)
+    Cc = jnp.repeat(ch(C.astype(jnp.float32)), rep, axis=3)
+
+    dA_t = jnp.moveaxis(dAc, -1, 2)                          # (b, c, h, q)
+    dA_cs = jnp.cumsum(dA_t, axis=-1)                        # (b, c, h, q)
+    L = jnp.exp(_segsum(dA_t))                               # (b, c, h, q, q)
+
+    # within-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp", Cc, Bc, L, xc)
+
+    # per-chunk states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)          # (b, c, h, q)
+    states = jnp.einsum("bckhn,bchk,bckhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[..., -1])                    # (b, c, h)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp                                        # (b,h,p,n),(b,h)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (b, c, h, p, n)
+
+    state_decay_out = jnp.exp(dA_cs)                         # (b, c, h, q)
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", Cc, prev_states,
+                       state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state."""
+    ssm: Array       # (b, h, p, n) fp32
+    conv: Array      # (b, d_conv - 1, conv_dim)
+
+
+def state_spec(cfg: SSMConfig, batch: int,
+               conv_dtype=jnp.bfloat16) -> SSMState:
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return SSMState(
+        jax.ShapeDtypeStruct(
+            (batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, conv_dim), conv_dtype))
+
+
+def state_axes() -> SSMState:
+    return SSMState(("act_batch", "act_ssm_heads", None, None),
+                    ("act_batch", None, None))
+
+
+def init_state(cfg: SSMConfig, batch: int,
+               conv_dtype=jnp.bfloat16) -> SSMState:
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return SSMState(
+        jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                  jnp.float32),
+        jnp.zeros((batch, cfg.d_conv - 1, conv_dim), conv_dtype))
+
+
+def _causal_conv(xs: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (b, s, c) with kernel (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xs.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def apply(params: dict, x: Array, cfg: SSMConfig) -> Array:
+    """Full-sequence Mamba2 mixer (train / prefill). (b, s, d) -> same."""
+    b, s, _ = x.shape
+    dt_ = x.dtype
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xs, B, C, dtr = _split_proj(zxbcdt, cfg)
+    xBC = _causal_conv(jnp.concatenate([xs, B, C], -1),
+                       params["conv_w"].astype(dt_),
+                       params["conv_b"].astype(dt_))
+    xs, B, C = jnp.split(
+        xBC, [cfg.d_inner, cfg.d_inner + cfg.n_groups * cfg.d_state], -1)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    xh = shard(xh, "act_batch", "act_seq", "act_ssm_heads", None)
+    Bh = B.reshape(b, s, cfg.n_groups, cfg.d_state)
+    Ch = C.reshape(b, s, cfg.n_groups, cfg.d_state)
+    y, _ = ssd_chunked(xh, dt, A, Bh, Ch, min(cfg.chunk, s))
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, cfg.d_inner)
+    y = common.rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
+    out = y @ params["out_proj"].astype(dt_)
+    return shard(out, "act_batch", "act_seq", "act_embed")
+
+
+def decode_step(params: dict, x: Array, state: SSMState, cfg: SSMConfig
+                ) -> tuple[Array, SSMState]:
+    """One-token recurrent step. x: (b, 1, d)."""
+    b = x.shape[0]
+    dt_ = x.dtype
+    zxbcdt = x[:, 0, :] @ params["in_proj"].astype(dt_)       # (b, dproj)
+    z, xs, B, C, dtr = _split_proj(zxbcdt, cfg)
+
+    # conv state update
+    xBC_new = jnp.concatenate([xs, B, C], -1)                 # (b, conv_dim)
+    conv_buf = jnp.concatenate(
+        [state.conv, xBC_new[:, None, :].astype(state.conv.dtype)], axis=1)
+    w = params["conv_w"].astype(dt_)                          # (k, conv_dim)
+    out = jnp.einsum("bkc,kc->bc", conv_buf.astype(dt_), w)
+    xBC = jax.nn.silu(out + params["conv_b"].astype(dt_))
+    new_conv = conv_buf[:, 1:, :]
+    xs, B, C = jnp.split(
+        xBC, [cfg.d_inner, cfg.d_inner + cfg.n_groups * cfg.d_state], -1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (b, h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                      # (b, h)
+    xh = xs.reshape(b, cfg.n_heads, cfg.head_dim).astype(jnp.float32)
+    rep = cfg.n_heads // cfg.n_groups
+    Bh = jnp.repeat(B.reshape(b, cfg.n_groups, cfg.d_state), rep,
+                    axis=1).astype(jnp.float32)               # (b, h, n)
+    Ch = jnp.repeat(C.reshape(b, cfg.n_groups, cfg.d_state), rep,
+                    axis=1).astype(jnp.float32)
+    dbx = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, xh)
+    new_ssm = state.ssm * dA[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Ch)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, cfg.d_inner).astype(dt_)
+    y = common.rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
+    out = (y @ params["out_proj"].astype(dt_))[:, None, :]
+    return shard(out, "act_batch", "act_seq", "act_embed"), \
+        SSMState(new_ssm, new_conv)

@@ -1,0 +1,366 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, strictly recurrent), with exponential gating and
+max-stabilizers.
+
+mLSTM is computed in a chunkwise-parallel form (quadratic within chunks,
+recurrent matrix-state across chunks — the TFLA-style schedule) so
+prefill_32k lowers without an S^2 working set; decode is a single
+recurrent step. sLSTM is a ``lax.scan`` over time (inherently sequential,
+as in the paper) with block-diagonal per-head recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import common
+from repro.models.common import P
+
+Array = jax.Array
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0     # mLSTM inner expansion
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel + single step
+# ---------------------------------------------------------------------------
+
+def mlstm_parallel(q, k, v, igate, fgate, chunk: int):
+    """Full-sequence mLSTM: (b, s, h, dh) inputs, (b, s, h, dh) out.
+
+    Chunkwise-parallel schedule (TFLA-style): all heavy einsums are
+    *outside* the sequential carry — phase A computes per-chunk state
+    contributions (vectorized over chunks), phase B scans only the cheap
+    (C, n, m) carry recurrence, phase C combines intra-chunk quadratic
+    attention with the carried inter-chunk states (vectorized again).
+    Besides being the TPU-efficient shape (the scan body is O(dh^2)
+    elementwise), this keeps HLO cost analysis honest: only negligible
+    FLOPs live inside the while loop. igate/fgate are pre-activations
+    (b, s, h).
+    """
+    b, s, h, dh = q.shape
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    k = k / jnp.sqrt(dh)
+    flog = jax.nn.log_sigmoid(fgate.astype(jnp.float32))
+
+    def to_chunks(t):   # (b, s, h, ...) -> (b, h, c, q, ...)
+        t = t.reshape(b, c, chunk, h, *t.shape[3:])
+        return jnp.moveaxis(t, 3, 1)
+
+    qc = to_chunks(q.astype(jnp.float32))                    # (b,h,c,q,dh)
+    kc = to_chunks(k.astype(jnp.float32))
+    vc = to_chunks(v.astype(jnp.float32))
+    ic = to_chunks(igate.astype(jnp.float32)[..., None])[..., 0]  # (b,h,c,q)
+    fc = to_chunks(flog[..., None])[..., 0]
+
+    # --- phase A: per-chunk aggregates (vectorized over c) ---
+    F = jnp.cumsum(fc, axis=-1)                              # (b, h, c, q)
+    F_tot = F[..., -1]                                       # (b, h, c)
+    w_state = ic + (F_tot[..., None] - F)                    # (b, h, c, q)
+    m_state = jnp.max(w_state, axis=-1)                      # (b, h, c)
+    ws = jnp.exp(w_state - m_state[..., None])
+    S_c = jnp.einsum("bhcj,bhcjd,bhcjv->bhcdv", ws, kc, vc)  # (b,h,c,dh,dh)
+    n_c = jnp.einsum("bhcj,bhcjd->bhcd", ws, kc)             # (b,h,c,dh)
+
+    # --- phase B: cheap carry scan over chunks ---
+    init = (jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.zeros((b, h), jnp.float32))
+
+    def scan_fn(carry, inp):
+        C_p, n_p, m_p = carry
+        S_i, nvec_i, m_st, f_tot = inp
+        m_new = jnp.maximum(m_p + f_tot, m_st)
+        dec = jnp.exp(m_p + f_tot - m_new)
+        w_i = jnp.exp(m_st - m_new)
+        C_new = dec[..., None, None] * C_p + w_i[..., None, None] * S_i
+        n_new = dec[..., None] * n_p + w_i[..., None] * nvec_i
+        return (C_new, n_new, m_new), (C_p, n_p, m_p)
+
+    xs = (jnp.moveaxis(S_c, 2, 0), jnp.moveaxis(n_c, 2, 0),
+          jnp.moveaxis(m_state, 2, 0), jnp.moveaxis(F_tot, 2, 0))
+    final, (C_prev, n_prev, m_prev) = jax.lax.scan(scan_fn, init, xs)
+    C_prev = jnp.moveaxis(C_prev, 0, 2)                      # (b,h,c,dh,dh)
+    n_prev = jnp.moveaxis(n_prev, 0, 2)                      # (b,h,c,dh)
+    m_prev = jnp.moveaxis(m_prev, 0, 2)                      # (b,h,c)
+
+    # --- phase C: combine (vectorized over c) ---
+    D = F[..., :, None] - F[..., None, :] + ic[..., None, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    D = jnp.where(tri, D, -jnp.inf)
+    m_local = jnp.max(D, axis=-1)                            # (b, h, c, q)
+    m_inter = F + m_prev[..., None]
+    m_eff = jnp.maximum(m_local, m_inter)
+
+    s_intra = jnp.exp(D - m_eff[..., None])                  # (b, h, c, q, q)
+    qk = jnp.einsum("bhctd,bhcjd->bhctj", qc, kc)
+    num = jnp.einsum("bhctj,bhctj,bhcjv->bhctv", qk, s_intra, vc)
+    den = jnp.einsum("bhctj,bhctj->bhct", qk, s_intra)
+    w_inter = jnp.exp(m_inter - m_eff)                       # (b, h, c, q)
+    num = num + w_inter[..., None] * jnp.einsum("bhctd,bhcdv->bhctv",
+                                                qc, C_prev)
+    den = den + w_inter * jnp.einsum("bhctd,bhcd->bhct", qc, n_prev)
+    n_t = jnp.maximum(jnp.abs(den), jnp.exp(-m_eff))
+    h_t = num / n_t[..., None]                               # (b, h, c, q, dv)
+
+    hs = jnp.moveaxis(h_t.reshape(b, h, s, dh), 1, 2)        # (b, s, h, dh)
+    return hs.astype(q.dtype), final
+
+
+def mlstm_step(q, k, v, igate, fgate, carry):
+    """One-token recurrence. q,k,v: (b, h, dh); gates: (b, h)."""
+    C_prev, n_prev, m_prev = carry
+    dh = q.shape[-1]
+    k = k.astype(jnp.float32) / jnp.sqrt(dh)
+    q = q.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    flog = jax.nn.log_sigmoid(fgate.astype(jnp.float32))
+    m_new = jnp.maximum(flog + m_prev, igate)
+    fw = jnp.exp(flog + m_prev - m_new)
+    iw = jnp.exp(igate - m_new)
+    C_new = fw[..., None, None] * C_prev + \
+        iw[..., None, None] * jnp.einsum("bhd,bhv->bhdv", k, v)
+    n_new = fw[..., None] * n_prev + iw[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM v1 pre-up-projection block)
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(cfg: XLSTMConfig) -> dict:
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "norm": common.norm_spec(d, "layernorm"),
+        "w_up": P((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": P((cfg.d_conv, di), ("conv_k", "conv_dim")),
+        "conv_b": P((di,), ("conv_dim",), "zeros"),
+        "wq": P((di, di), ("ssm_inner", "qkv_dim")),
+        "wk": P((di, di), ("ssm_inner", "qkv_dim")),
+        "wv": P((di, di), ("ssm_inner", "qkv_dim")),
+        "w_i": P((di, h), ("ssm_inner", "ssm_heads"), "normal", 0.01),
+        "b_i": P((h,), ("ssm_heads",), "zeros"),
+        "w_f": P((di, h), ("ssm_inner", "ssm_heads"), "normal", 0.01),
+        "b_f": P((h,), ("ssm_heads",), "ones"),
+        "out_norm": {"scale": P((di,), ("norm",), "ones")},
+        "w_down": P((di, d), ("ssm_inner", "embed")),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: Array      # (b, h, dh, dh) fp32
+    n: Array      # (b, h, dh) fp32
+    m: Array      # (b, h) fp32
+    conv: Array   # (b, d_conv - 1, d_inner)
+
+
+def mlstm_state_spec(cfg: XLSTMConfig, batch: int,
+                     conv_dtype=jnp.bfloat16) -> MLSTMState:
+    dh, h, di = cfg.head_dim, cfg.n_heads, cfg.d_inner
+    return MLSTMState(
+        jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, h), jnp.float32),
+        jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, di), conv_dtype))
+
+
+def mlstm_state_axes() -> MLSTMState:
+    return MLSTMState(("act_batch", "act_ssm_heads", None, None),
+                      ("act_batch", "act_ssm_heads", None),
+                      ("act_batch", "act_ssm_heads"),
+                      ("act_batch", None, None))
+
+
+def init_mlstm_state(cfg: XLSTMConfig, batch: int,
+                     conv_dtype=jnp.bfloat16) -> MLSTMState:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        mlstm_state_spec(cfg, batch, conv_dtype))
+
+
+def _causal_conv(xs: Array, w: Array, b: Array) -> Array:
+    kk = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (kk - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xs.shape[1], :] * w[i][None, None, :]
+              for i in range(kk))
+    return jax.nn.silu(out + b)
+
+
+def _mlstm_qkv_gates(params, x_norm, cfg, conv_fn):
+    dt = x_norm.dtype
+    up = x_norm @ params["w_up"].astype(dt)
+    x_m, z = jnp.split(up, 2, axis=-1)
+    x_c = conv_fn(x_m)
+    q = x_c @ params["wq"].astype(dt)
+    k = x_c @ params["wk"].astype(dt)
+    v = x_m @ params["wv"].astype(dt)
+    ig = (x_c @ params["w_i"].astype(dt)
+          + params["b_i"].astype(dt)).astype(jnp.float32)
+    fg = (x_c @ params["w_f"].astype(dt)
+          + params["b_f"].astype(dt)).astype(jnp.float32)
+    return q, k, v, ig, fg, z, x_m
+
+
+def mlstm_block(params: dict, x: Array, cfg: XLSTMConfig) -> Array:
+    """Full-sequence mLSTM block (residual inside). (b, s, d) -> same."""
+    b, s, d = x.shape
+    dt = x.dtype
+    h, dh = cfg.n_heads, cfg.head_dim
+    x_norm = common.apply_norm(x, params["norm"], "layernorm")
+
+    def conv_fn(x_m):
+        return _causal_conv(x_m, params["conv_w"].astype(dt),
+                            params["conv_b"].astype(dt))
+
+    q, k, v, ig, fg, z, _ = _mlstm_qkv_gates(params, x_norm, cfg, conv_fn)
+    q = shard(q.reshape(b, s, h, dh), "act_batch", "act_seq",
+              "act_ssm_heads", None)
+    k = k.reshape(b, s, h, dh)
+    v = v.reshape(b, s, h, dh)
+    ht, _ = mlstm_parallel(q, k, v, ig, fg, min(cfg.chunk, s))
+    ht = ht.reshape(b, s, cfg.d_inner)
+    ht = common.rms_norm(ht, params["out_norm"]["scale"])
+    out = (ht * jax.nn.silu(z)) @ params["w_down"].astype(dt)
+    return x + shard(out, "act_batch", "act_seq", "act_embed")
+
+
+def mlstm_block_step(params: dict, x: Array, state: MLSTMState,
+                     cfg: XLSTMConfig) -> tuple[Array, MLSTMState]:
+    """One-token mLSTM block. x: (b, 1, d)."""
+    b = x.shape[0]
+    dt = x.dtype
+    h, dh = cfg.n_heads, cfg.head_dim
+    x_norm = common.apply_norm(x[:, 0, :], params["norm"], "layernorm")
+
+    new_conv_holder = {}
+
+    def conv_fn(x_m):   # x_m: (b, d_inner) single step
+        buf = jnp.concatenate(
+            [state.conv, x_m[:, None, :].astype(state.conv.dtype)], axis=1)
+        w = params["conv_w"].astype(dt)
+        out = jnp.einsum("bkc,kc->bc", buf.astype(dt), w)
+        new_conv_holder["conv"] = buf[:, 1:, :]
+        return jax.nn.silu(out + params["conv_b"].astype(dt))
+
+    q, k, v, ig, fg, z, _ = _mlstm_qkv_gates(params, x_norm, cfg, conv_fn)
+    q = q.reshape(b, h, dh)
+    k = k.reshape(b, h, dh)
+    v = v.reshape(b, h, dh)
+    ht, (C, n, m) = mlstm_step(q, k, v, ig, fg, (state.C, state.n, state.m))
+    ht = ht.reshape(b, cfg.d_inner).astype(dt)
+    ht = common.rms_norm(ht, params["out_norm"]["scale"])
+    out = ((ht * jax.nn.silu(z)) @ params["w_down"].astype(dt))[:, None, :]
+    return x + out, MLSTMState(C, n, m, new_conv_holder["conv"])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block — strictly recurrent scalar memory
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg: XLSTMConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = cfg.s_head_dim
+    return {
+        "norm": common.norm_spec(d, "layernorm"),
+        "w": P((d, 4 * d), ("embed", "ssm_inner")),
+        "r": P((4, h, dh, dh), (None, "ssm_heads", None, None),
+               "normal", 0.02),
+        "b": P((4 * d,), ("ssm_inner",), "zeros"),
+        "out_norm": {"scale": P((d,), ("norm",), "ones")},
+        "w_down": P((d, d), ("embed", "embed")),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: Array     # (b, h, dh) fp32
+    n: Array
+    hid: Array
+    m: Array     # (b, h, dh)
+
+
+def slstm_state_spec(cfg: XLSTMConfig, batch: int) -> SLSTMState:
+    h, dh = cfg.n_heads, cfg.s_head_dim
+    s = jax.ShapeDtypeStruct((batch, h, dh), jnp.float32)
+    return SLSTMState(s, s, s, s)
+
+
+def slstm_state_axes() -> SLSTMState:
+    ax = ("act_batch", "act_ssm_heads", None)
+    return SLSTMState(ax, ax, ax, ax)
+
+
+def init_slstm_state(cfg: XLSTMConfig, batch: int) -> SLSTMState:
+    h, dh = cfg.n_heads, cfg.s_head_dim
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return SLSTMState(z, z, z, z)
+
+
+def _slstm_cell(wx: Array, r: Array, state: SLSTMState
+                ) -> tuple[Array, SLSTMState]:
+    """wx: (b, 4, h, dh) pre-activations from the input path."""
+    rec = jnp.einsum("ghde,bhe->bghd", r.astype(jnp.float32), state.hid)
+    zt, it, ft, ot = [wx.astype(jnp.float32)[:, j] + rec[:, j]
+                      for j in range(4)]
+    m_new = jnp.maximum(ft + state.m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + state.m - m_new)
+    c_new = f_p * state.c + i_p * jnp.tanh(zt)
+    n_new = f_p * state.n + i_p
+    hid = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return hid, SLSTMState(c_new, n_new, hid, m_new)
+
+
+def slstm_block(params: dict, x: Array, cfg: XLSTMConfig,
+                state: SLSTMState | None = None
+                ) -> tuple[Array, SLSTMState]:
+    """Sequence sLSTM block via lax.scan. (b, s, d) -> same."""
+    b, s, d = x.shape
+    dt = x.dtype
+    h, dh = cfg.n_heads, cfg.s_head_dim
+    x_norm = common.apply_norm(x, params["norm"], "layernorm")
+    wx = (x_norm @ params["w"].astype(dt)
+          + params["b"].astype(dt))                       # (b, s, 4d)
+    wx = wx.reshape(b, s, 4, h, dh)
+    state = state if state is not None else init_slstm_state(cfg, b)
+
+    def step(st, wx_t):
+        hid, st = _slstm_cell(wx_t, params["r"], st)
+        return st, hid
+
+    state, hids = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    hids = jnp.moveaxis(hids, 0, 1).reshape(b, s, d).astype(dt)
+    hids = common.rms_norm(hids, params["out_norm"]["scale"])
+    out = hids @ params["w_down"].astype(dt)
+    return x + shard(out, "act_batch", "act_seq", "act_embed"), state
+
+
+def slstm_block_step(params: dict, x: Array, state: SLSTMState,
+                     cfg: XLSTMConfig) -> tuple[Array, SLSTMState]:
+    """One-token sLSTM block. x: (b, 1, d)."""
+    out, state = slstm_block(params, x, cfg, state)
+    return out, state

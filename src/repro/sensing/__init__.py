@@ -1,0 +1,4 @@
+"""Sensing substrate: synthetic radar data, ADC simulation, fragment
+sampling, baseline detectors (CRUW stand-in; DESIGN.md §1)."""
+
+from repro.sensing import adc, baselines, fragments, synthetic  # noqa: F401

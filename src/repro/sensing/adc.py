@@ -1,0 +1,43 @@
+"""ADC simulation: quantization + noise of the low/high-precision paths.
+
+HyperSense's premise (paper §III-B, [29]): a low-precision ADC is orders of
+magnitude cheaper, and HDC tolerates the resulting quantization noise. The
+HDC gate therefore always sees ``quantize(frame, low_bits)``; the backend
+sees the high-precision frame only when the gate fires.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def quantize(frame: Array, bits: int, v_max: float = 1.5) -> Array:
+    """Uniform mid-rise quantization to ``bits`` bits over [0, v_max]."""
+    levels = (1 << bits) - 1
+    q = jnp.round(jnp.clip(frame, 0.0, v_max) / v_max * levels)
+    return q * (v_max / levels)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def quantize_codes(frame: Array, bits: int, v_max: float = 1.5) -> Array:
+    """Integer ADC codes (what the near-sensor datapath actually consumes)."""
+    levels = (1 << bits) - 1
+    return jnp.round(jnp.clip(frame, 0.0, v_max) / v_max * levels
+                     ).astype(jnp.int32)
+
+
+def adc_noise(key: Array, frame: Array, thermal_sigma: float = 0.01) -> Array:
+    """Additive thermal/reference noise ahead of the converter."""
+    return frame + thermal_sigma * jax.random.normal(key, frame.shape)
+
+
+def low_precision_view(key: Array, frame: Array, bits: int = 4,
+                       thermal_sigma: float = 0.01) -> Array:
+    """The always-on sensing path: noisy low-precision capture."""
+    return quantize(adc_noise(key, frame, thermal_sigma), bits)

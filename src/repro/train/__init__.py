@@ -1,0 +1,3 @@
+"""Training runtime: optimizers, schedules, loop, compression, fault tolerance."""
+
+from repro.train import optim  # noqa: F401

@@ -1,0 +1,94 @@
+"""Gradient compression for cross-pod all-reduce (DESIGN.md §5).
+
+int8 block-quantized gradients with **error feedback** (the residual of
+the quantization is carried to the next step, preserving convergence —
+1-bit Adam / EF-SGD lineage). At 512+ chips the cross-pod data-parallel
+all-reduce is the dominant collective for large dense models; int8 cuts
+its payload 4x vs fp32 (2x vs bf16) at equal step-quality (error feedback
+absorbs the quantization bias).
+
+Usage (inside the train step, before the optimizer):
+
+    grads_q, ef_state = compress_grads(grads, ef_state)
+    # grads_q are int8+scale pytrees; all-reduce happens on these (under
+    # pjit the mean over the data axis is expressed by the sharding of the
+    # batch; for explicit-collective setups use psum on the quantized
+    # payload), then:
+    grads = decompress_grads(grads_q)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+BLOCK = 256
+
+
+class QGrad(NamedTuple):
+    q: Array          # int8 quantized blocks
+    scale: Array      # per-block fp32 scale
+
+
+def _quantize(g: Array) -> tuple[QGrad, Array]:
+    """Block-wise symmetric int8 quantization; returns (qgrad, error)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    err = (blocks - deq).reshape(-1)[:n].reshape(g.shape)
+    return QGrad(q=q, scale=scale[:, 0]), err.astype(g.dtype)
+
+
+def _dequantize(qg: QGrad, shape, dtype) -> Array:
+    deq = qg.q.astype(jnp.float32) * qg.scale[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return deq.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def init_error_feedback(grads) -> dict:
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def compress_grads(grads, ef_state):
+    """-> (quantized pytree, new error-feedback state).
+
+    The error from this round's quantization is added to next round's
+    gradients before quantizing (error feedback).
+    """
+    corrected = jax.tree.map(lambda g, e: g + e, grads, ef_state)
+    qs_and_errs = jax.tree.map(_quantize, corrected)
+    qgrads = jax.tree.map(lambda t: t[0], qs_and_errs,
+                          is_leaf=lambda x: isinstance(x, tuple)
+                          and len(x) == 2 and isinstance(x[0], QGrad))
+    new_ef = jax.tree.map(lambda t: t[1], qs_and_errs,
+                          is_leaf=lambda x: isinstance(x, tuple)
+                          and len(x) == 2 and isinstance(x[0], QGrad))
+    return qgrads, new_ef
+
+
+def decompress_grads(qgrads, like):
+    return jax.tree.map(
+        lambda qg, l: _dequantize(qg, l.shape, l.dtype), qgrads, like,
+        is_leaf=lambda x: isinstance(x, QGrad))
+
+
+def compression_ratio(grads) -> float:
+    """Payload bytes ratio vs fp32 (int8 + per-block fp32 scales)."""
+    def bytes_of(x):
+        return x.size * x.dtype.itemsize
+
+    raw = sum(x.size * 4 for x in jax.tree.leaves(grads))
+    comp = sum(x.size * 1 + (x.size // BLOCK + 1) * 4
+               for x in jax.tree.leaves(grads))
+    return comp / raw

@@ -1,0 +1,146 @@
+"""Optimizers and LR schedules in pure JAX (no optax in this container).
+
+Implements the pieces a production trainer needs:
+
+* AdamW with decoupled weight decay, bias-corrected moments
+* global-norm gradient clipping
+* warmup + cosine / linear / constant schedules
+* SGD-momentum (for baselines)
+
+All state is a pytree of the same structure as params, so it shards with
+the params' shardings (crucial: optimizer state inherits the logical-axis
+sharding; no extra rules needed).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = object
+
+
+class AdamWState(NamedTuple):
+    step: Array      # ()
+    mu: PyTree       # first moment
+    nu: PyTree       # second moment
+
+
+class AdamW(NamedTuple):
+    """AdamW config; behaves like optax's GradientTransformation."""
+    lr: Callable[[Array], Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = 1.0
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+class SGDState(NamedTuple):
+    step: Array
+    momentum: PyTree
+
+
+class SGD(NamedTuple):
+    lr: Callable[[Array], Array] | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: float | None = None
+
+    def init(self, params: PyTree) -> SGDState:
+        return SGDState(step=jnp.zeros((), jnp.int32),
+                        momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def update(self, grads: PyTree, state: SGDState, params: PyTree
+               ) -> tuple[PyTree, SGDState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        mom = jax.tree.map(lambda m, g: self.momentum * m + g,
+                           state.momentum, grads)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        updates = jax.tree.map(lambda p, m: (-lr * m).astype(p.dtype),
+                               params, mom)
+        return updates, SGDState(step=step, momentum=mom)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+# ---------------------------------------------------------------------------
+# Schedules: step (int32 array) -> lr
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable[[Array], Array]:
+    def sched(step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 +
+                                                     jnp.cos(math.pi * prog))
+        return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+    return sched
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int
+                  ) -> Callable[[Array], Array]:
+    def sched(step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(s < warmup_steps, warm, peak_lr * (1 - prog))
+    return sched
+
+
+def constant(lr: float) -> Callable[[Array], Array]:
+    return lambda step: jnp.full((), lr, jnp.float32)

@@ -1,0 +1,57 @@
+"""HyperSenseGate: HDC front-end gating of backend compute."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fragment_model as fm, gate, hypersense
+from repro.core.sensor_control import ControllerConfig
+from repro.sensing import adc, fragments, synthetic
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _gate(key, hold=0):
+    cfg = synthetic.RadarConfig(height=32, width=32)
+    frames, masks, _ = synthetic.make_dataset(key, 30, cfg)
+    frames = adc.quantize(frames, 4)
+    frs, labs = fragments.sample_fragments(
+        np.asarray(frames), np.asarray(masks), h=8, w=8, per_frame=2,
+        seed=0)
+    model, _ = fm.train_fragment_model(
+        jax.random.fold_in(key, 1), jnp.asarray(frs), jnp.asarray(labs),
+        dim=512, epochs=4)
+    B0 = model.B.reshape(8, 8, -1)[:, 0, :]
+    hs = hypersense.from_fragment_model(model, B0, h=8, w=8, stride=4)
+    # pick an operating T_score from validation negatives (80th pct)
+    neg, _, _ = synthetic.make_dataset(jax.random.fold_in(key, 5), 12, cfg)
+    scores = np.asarray(hypersense.frame_scores_batch(
+        hs, adc.quantize(neg, 4), 0))
+    hs = hs._replace(t_score=float(np.quantile(scores, 0.8)))
+    return gate.HyperSenseGate(hs, ControllerConfig(hold_frames=hold)), cfg
+
+
+def test_gate_reduces_backend_compute():
+    g, cfg = _gate(jax.random.PRNGKey(0))
+    stream, labels = synthetic.make_stream(jax.random.PRNGKey(1), 80, cfg,
+                                           event_prob=0.03, event_len=6)
+    stream = adc.quantize(stream, 4)
+    kept, idx = g.filter(stream)
+    assert kept.shape[0] == len(idx) == g.stats.n_passed
+    acct = gate.backend_flops_saved(g.stats, flops_per_item=1e12)
+    assert 0.0 <= acct["duty_cycle"] < 1.0
+    assert acct["backend_saving"] == 1.0 - acct["duty_cycle"]
+    # the gate passes a minority of an idle-dominated stream
+    assert acct["duty_cycle"] < 0.9
+
+
+def test_gate_hysteresis_expands_selection():
+    g0, cfg = _gate(jax.random.PRNGKey(2), hold=0)
+    g3, _ = _gate(jax.random.PRNGKey(2), hold=3)
+    stream, _ = synthetic.make_stream(jax.random.PRNGKey(3), 60, cfg,
+                                      event_prob=0.05, event_len=5)
+    stream = adc.quantize(stream, 4)
+    idx0 = g0.select(stream)
+    idx3 = g3.select(stream)
+    assert set(idx0).issubset(set(idx3))
+    assert len(idx3) >= len(idx0)

@@ -1,0 +1,156 @@
+"""Unit + property tests for the HDC core (ops, encoding equivalences)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding, hdc
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+def rand_hv(k, dim=256):
+    return jax.random.normal(k, (dim,))
+
+
+# ---------------------------------------------------------------------------
+# HDC operation properties (paper §III-A)
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(st.integers(0, 2**16), st.integers(64, 512))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_bundle_similar_to_components(seed, dim):
+    k1, k2 = jax.random.split(key(seed))
+    h1, h2 = rand_hv(k1, dim), rand_hv(k2, dim)
+    b = hdc.bundle(h1, h2)
+    assert hdc.cosine_similarity(b, h1) > 0.3
+    assert hdc.cosine_similarity(b, h2) > 0.3
+
+
+@hypothesis.given(st.integers(0, 2**16))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_bind_dissimilar_but_similarity_preserving(seed):
+    dim = 2048
+    k1, k2, k3 = jax.random.split(key(seed), 3)
+    h1, h2, v = rand_hv(k1, dim), rand_hv(k2, dim), rand_hv(k3, dim)
+    bound = hdc.bind(v, h1)
+    # dissimilar to both operands
+    assert abs(hdc.cosine_similarity(bound, h1)) < 0.2
+    assert abs(hdc.cosine_similarity(bound, v)) < 0.2
+    # similarity preservation: sim(v*h1, v*h2) ~ sim(h1, h2) in expectation
+    s_bound = hdc.cosine_similarity(hdc.bind(v, h1), hdc.bind(v, h2))
+    s_raw = hdc.cosine_similarity(h1, h2)
+    assert abs(float(s_bound) - float(s_raw)) < 0.35
+
+
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 64))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_permute_orthogonal_and_invertible(seed, shift):
+    dim = 2048
+    h = rand_hv(key(seed), dim)
+    p = hdc.permute(h, shift)
+    assert abs(hdc.cosine_similarity(p, h)) < 0.15
+    np.testing.assert_allclose(np.asarray(hdc.permute(p, -shift)),
+                               np.asarray(h))
+
+
+def test_class_scores_matches_pairwise():
+    q = jax.random.normal(key(1), (5, 128))
+    c = jax.random.normal(key(2), (3, 128))
+    scores = hdc.class_scores(q, c)
+    for i in range(5):
+        for j in range(3):
+            np.testing.assert_allclose(
+                float(scores[i, j]),
+                float(hdc.cosine_similarity(q[i], c[j])), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Encoding (paper §III-A, §IV-B)
+# ---------------------------------------------------------------------------
+
+def test_rff_encoding_preserves_similarity_ordering():
+    """phi preserves the notion of similarity: close inputs -> similar HVs."""
+    k1, k2 = jax.random.split(key(3))
+    B, b = encoding.make_iid_base(k1, 64, 4096)
+    x = jax.random.normal(k2, (64,))
+    x_close = x + 0.05 * jax.random.normal(key(4), (64,))
+    x_far = jax.random.normal(key(5), (64,))
+    hx = encoding.apply_nonlinearity(x @ B, b)
+    hc = encoding.apply_nonlinearity(x_close @ B, b)
+    hf = encoding.apply_nonlinearity(x_far @ B, b)
+    assert hdc.cosine_similarity(hx, hc) > hdc.cosine_similarity(hx, hf)
+
+
+def test_perm_base_structure():
+    """Eq. 1: B[r, j+1] is the permutation of B[r, j]."""
+    B0, _ = encoding.make_perm_base_rows(key(6), 3, 128)
+    B = encoding.expand_perm_base(B0, 4)
+    assert B.shape == (3, 4, 128)
+    for r in range(3):
+        for j in range(3):
+            np.testing.assert_allclose(
+                np.asarray(B[r, j + 1]),
+                np.asarray(hdc.permute(B[r, j], encoding.SHIFT)))
+
+
+@pytest.mark.parametrize("stride", [1, 2, 3])
+@pytest.mark.parametrize("hw", [(3, 4), (5, 5), (2, 7)])
+def test_reuse_equals_naive(hw, stride):
+    """The TPU prefix-sum reuse is numerically identical to naive encode."""
+    h, w = hw
+    frame = jax.random.normal(key(7), (17, 19))
+    B0, b = encoding.make_perm_base_rows(key(8), h, 96)
+    naive = encoding.encode_frame_naive(frame, B0, b, h=h, w=w,
+                                        stride=stride)
+    reuse = encoding.encode_frame_reuse(frame, B0, b, h=h, w=w,
+                                        stride=stride)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(reuse),
+                               rtol=3e-5, atol=3e-5)
+
+
+@hypothesis.given(st.integers(0, 2**16), st.sampled_from(["linear", "rff"]),
+                  st.booleans())
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_reuse_equals_naive_property(seed, nonlin, normalize):
+    frame = jax.random.normal(key(seed), (12, 12))
+    B0, b = encoding.make_perm_base_rows(key(seed + 1), 3, 64)
+    naive = encoding.encode_frame_naive(frame, B0, b, h=3, w=3, stride=2,
+                                        nonlinearity=nonlin,
+                                        normalize=normalize)
+    reuse = encoding.encode_frame_reuse(frame, B0, b, h=3, w=3, stride=2,
+                                        nonlinearity=nonlin,
+                                        normalize=normalize)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(reuse),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_extract_fragments_matches_manual():
+    frame = jnp.arange(6 * 7, dtype=jnp.float32).reshape(6, 7)
+    frags = encoding.extract_fragments(frame, 2, 3, 2)
+    assert frags.shape == (3, 3, 2, 3)
+    np.testing.assert_allclose(np.asarray(frags[1, 2]),
+                               np.asarray(frame[2:4, 4:7]))
+
+
+def test_num_windows_skipped_area():
+    # 13 wide, window 4, stride 3 -> starts at 0,3,6,9 (9+4=13 fits) = 4
+    assert encoding.num_windows(13, 4, 3) == 4
+    # stride 5 -> 0,5 (5+4=9 fits), 10+4=14 doesn't -> 2 (skipped area)
+    assert encoding.num_windows(13, 4, 5) == 2
+
+
+def test_encode_fragments_normalization():
+    frags = jax.random.normal(key(9), (4, 3, 3)) * 100.0
+    B, b = encoding.make_iid_base(key(10), 9, 64)
+    h1 = encoding.encode_fragments(frags, B, b)
+    h2 = encoding.encode_fragments(frags * 5.0, B, b)  # scale-invariant
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-4,
+                               atol=1e-5)

@@ -1,0 +1,118 @@
+"""HyperSense frame model + fragment model behaviour tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding, fragment_model as fm, hypersense, metrics
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _toy_fragment_task(key, n=200, h=8, w=8):
+    k1, k2 = jax.random.split(key)
+    noise = jax.random.normal(k1, (n, h, w)) * 0.3
+    labels = jnp.arange(n) % 2
+    yy, xx = jnp.mgrid[0:h, 0:w]
+    blob = jnp.exp(-(((yy - h / 2) ** 2 + (xx - w / 2) ** 2) / 6.0))
+    frags = noise + labels[:, None, None] * blob
+    return frags, labels
+
+
+def test_bundle_init_equals_manual_sum():
+    hvs = jax.random.normal(jax.random.PRNGKey(0), (10, 64))
+    labels = jnp.array([0, 1] * 5)
+    chvs = fm.bundle_init(hvs, labels, 2)
+    np.testing.assert_allclose(np.asarray(chvs[0]),
+                               np.asarray(hvs[::2].sum(0)), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(chvs[1]),
+                               np.asarray(hvs[1::2].sum(0)), rtol=1e-5)
+
+
+def test_retraining_improves_or_keeps_accuracy():
+    frags, labels = _toy_fragment_task(jax.random.PRNGKey(1))
+    model, info = fm.train_fragment_model(
+        jax.random.PRNGKey(2), frags, labels, dim=1024, epochs=8)
+    accs = info["val_accuracy"]
+    assert info["best"] >= accs[0] - 1e-9
+    assert info["best"] > 0.9
+
+
+def test_retrain_only_updates_on_mistakes():
+    """If initial accuracy is 1.0, retraining must not change classes."""
+    frags, labels = _toy_fragment_task(jax.random.PRNGKey(3), n=40)
+    model, info = fm.train_fragment_model(
+        jax.random.PRNGKey(4), frags, labels, dim=2048, epochs=1)
+    hvs = encoding.encode_fragments(frags, model.B, model.b)
+    if float(fm.accuracy(model.class_hvs, hvs, labels)) == 1.0:
+        chvs2 = fm.retrain_epoch(model.class_hvs, hvs, labels)
+        np.testing.assert_allclose(np.asarray(chvs2),
+                                   np.asarray(model.class_hvs))
+
+
+@hypothesis.given(st.integers(0, 1000))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_positive_score_monotone_with_argmax(seed):
+    """score > 0 <=> argmax picks class 1 (cosine-margin consistency)."""
+    k = jax.random.PRNGKey(seed)
+    hvs = jax.random.normal(k, (20, 128))
+    chvs = jax.random.normal(jax.random.fold_in(k, 1), (2, 128))
+    s = fm.positive_score(chvs, hvs)
+    pred = fm.predict(chvs, hvs)
+    np.testing.assert_array_equal(np.asarray(s > 0), np.asarray(pred == 1))
+
+
+def test_frame_detection_score_is_kth_statistic():
+    scores = jnp.array([[0.9, 0.1], [0.5, 0.3]])
+    assert float(hypersense.frame_detection_score(scores, 0)) == \
+        pytest.approx(0.9)
+    assert float(hypersense.frame_detection_score(scores, 2)) == \
+        pytest.approx(0.3)
+    # decision equivalence: count(s > t) > T  <=>  kth_largest > t
+    for t in [0.0, 0.2, 0.4, 0.6, 1.0]:
+        for T in [0, 1, 2, 3]:
+            direct = int(jnp.sum(scores > t)) > T
+            viakth = float(hypersense.frame_detection_score(
+                scores, min(T, 3))) > t
+            if T < 4:
+                assert direct == viakth, (t, T)
+
+
+def test_detect_batch_consistency():
+    frames = jax.random.uniform(jax.random.PRNGKey(5), (3, 20, 20))
+    B0, b = encoding.make_perm_base_rows(jax.random.PRNGKey(6), 5, 64)
+    C = jax.random.normal(jax.random.PRNGKey(7), (2, 64))
+    hs = hypersense.HyperSenseModel(
+        class_hvs=C, B0=B0, b=b, h=5, w=5, stride=3, t_score=0.0,
+        t_detection=1)
+    batch = hypersense.detect_batch(hs, frames)
+    single = [hypersense.detect(hs, f) for f in frames]
+    np.testing.assert_array_equal(np.asarray(batch),
+                                  np.asarray(jnp.stack(single)))
+
+
+def test_roc_curve_properties():
+    scores = np.random.default_rng(0).normal(size=200)
+    labels = scores + np.random.default_rng(1).normal(size=200) > 0
+    fpr, tpr, thr = metrics.roc_curve(scores, labels)
+    assert fpr[0] == 0 and tpr[0] == 0
+    assert fpr[-1] == 1 and tpr[-1] == 1
+    assert np.all(np.diff(fpr) >= 0) and np.all(np.diff(tpr) >= 0)
+    assert 0.5 < metrics.auc(fpr, tpr) <= 1.0
+    assert 0 <= metrics.partial_auc_above_tpr(fpr, tpr) <= 0.2
+
+
+@hypothesis.given(st.integers(0, 1000))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_auc_of_perfect_and_random_scores(seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 2, 100).astype(bool)
+    hypothesis.assume(labels.any() and not labels.all())
+    perfect = labels.astype(float)
+    fpr, tpr, _ = metrics.roc_curve(perfect, labels)
+    assert metrics.auc(fpr, tpr) == 1.0
+    fpr, tpr, _ = metrics.roc_curve(-perfect, labels)
+    assert metrics.auc(fpr, tpr) == 0.0

@@ -1,0 +1,151 @@
+"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracles.
+
+Sweeps shapes/dtypes per the deliverable: every kernel is validated against
+``repro.kernels.ref`` on CPU via ``interpret=True``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding
+from repro.kernels import hdc_encode as k_enc
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels import similarity as k_sim
+from repro.kernels import sliding_scores as k_ss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+# ---------------------------------------------------------------------------
+# hdc_encode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(16, 64, 256), (100, 300, 1000),
+                                   (7, 1000, 513), (1, 9, 2048)])
+@pytest.mark.parametrize("nonlin", ["rff", "linear"])
+def test_hdc_encode_sweep(shape, dtype, nonlin):
+    n, k, d = shape
+    x = jax.random.normal(key(0), (n, k), dtype=dtype)
+    x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
+    B = jax.random.normal(key(1), (k, d), dtype=dtype)
+    b = jax.random.uniform(key(2), (d,), maxval=6.28)
+    got = k_enc.hdc_encode(x, B, b, nonlinearity=nonlin, interpret=True,
+                           block_n=32, block_d=256, block_k=128)
+    want = ref.hdc_encode(x, B, b, nonlinearity=nonlin)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_hdc_encode_block_invariance():
+    """Output must not depend on the tiling."""
+    x = jax.random.normal(key(3), (33, 100))
+    B = jax.random.normal(key(4), (100, 300))
+    b = jax.random.uniform(key(5), (300,), maxval=6.28)
+    outs = [k_enc.hdc_encode(x, B, b, interpret=True, block_n=bn,
+                             block_d=bd, block_k=bk)
+            for bn, bd, bk in [(8, 128, 32), (32, 300, 100), (16, 256, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# similarity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(50, 300, 2), (128, 1024, 2),
+                                   (3, 5000, 4), (257, 129, 3)])
+def test_similarity_sweep(shape, dtype):
+    n, d, c = shape
+    q = jax.random.normal(key(6), (n, d), dtype=dtype)
+    ch = jax.random.normal(key(7), (c, d), dtype=dtype)
+    got = k_sim.similarity(q, ch, block_n=32, block_d=128, interpret=True)
+    want = ref.similarity(q, ch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# sliding_scores (the paper's computation-reuse accelerator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+@pytest.mark.parametrize("hw", [(4, 5), (3, 3), (6, 4)])
+@pytest.mark.parametrize("block_d", [32, 64, 1000])
+def test_sliding_scores_sweep(hw, stride, block_d):
+    h, w = hw
+    H, W, D = 18, 22, 64
+    frame = jax.random.uniform(key(8), (H, W))
+    B0, b = encoding.make_perm_base_rows(key(9), h, D)
+    C = jax.random.normal(key(10), (2, D))
+    tiles = k_ss.precompute_tiles(B0, b, C, W=W, w=w, stride=stride,
+                                  block_d=block_d)
+    got = k_ss.fragment_scores(frame, tiles, h=h, w=w, stride=stride,
+                               interpret=True)
+    want = ref.fragment_scores(frame, C, B0, b, h=h, w=w, stride=stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("nonlin", ["rff", "linear"])
+def test_sliding_scores_nonlinearities(nonlin):
+    H, W, h, w, D = 12, 16, 3, 4, 96
+    frame = jax.random.uniform(key(11), (H, W))
+    B0, b = encoding.make_perm_base_rows(key(12), h, D)
+    C = jax.random.normal(key(13), (2, D))
+    tiles = k_ss.precompute_tiles(B0, b, C, W=W, w=w, stride=1, block_d=48)
+    got = k_ss.fragment_scores(frame, tiles, h=h, w=w, stride=1,
+                               nonlinearity=nonlin, interpret=True)
+    want = ref.fragment_scores(frame, C, B0, b, h=h, w=w, stride=1,
+                               nonlinearity=nonlin)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_window_norms_matches_direct():
+    frame = jax.random.normal(key(14), (20, 24))
+    norms = k_ss.window_norms(frame, 5, 6, 2)
+    frags = encoding.extract_fragments(frame, 5, 6, 2)
+    direct = jnp.linalg.norm(frags.reshape(*frags.shape[:2], -1), axis=-1)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(direct),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ops wrappers (the API the rest of the system calls)
+# ---------------------------------------------------------------------------
+
+def test_ops_encode_matches_core_encoding():
+    frags = jax.random.normal(key(15), (10, 4, 4))
+    B, b = encoding.make_iid_base(key(16), 16, 128)
+    got = ops.hdc_encode(frags, B, b)
+    want = encoding.encode_fragments(frags, B, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ops_fragment_score_map_matches_jnp_path():
+    from repro.core import hypersense
+    H, W, h, w, D = 14, 14, 3, 3, 64
+    frame = jax.random.uniform(key(17), (H, W))
+    B0, b = encoding.make_perm_base_rows(key(18), h, D)
+    C = jax.random.normal(key(19), (2, D))
+    got = ops.fragment_score_map(frame, C, B0, b, h=h, w=w, stride=1)
+    want = hypersense.fragment_score_map(frame, C, B0, b, h=h, w=w,
+                                         stride=1, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

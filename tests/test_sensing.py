@@ -1,0 +1,131 @@
+"""Sensing substrate: synthetic data, ADC, fragments, control, energy."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy
+from repro.core.sensor_control import (ControllerConfig, SensorController,
+                                       simulate_stream)
+from repro.sensing import adc, fragments, synthetic
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_dataset_balanced_and_masks_match_labels():
+    cfg = synthetic.RadarConfig(height=32, width=32)
+    frames, masks, labels = synthetic.make_dataset(
+        jax.random.PRNGKey(0), 40, cfg)
+    assert frames.shape == (40, 32, 32)
+    assert abs(float(labels.mean()) - 0.5) < 0.11
+    has_mask = np.asarray(masks.sum(axis=(1, 2)) > 0)
+    np.testing.assert_array_equal(has_mask, np.asarray(labels) == 1)
+
+
+def test_positive_frames_brighter_at_mask():
+    cfg = synthetic.RadarConfig(height=32, width=32)
+    frames, masks, labels = synthetic.make_dataset(
+        jax.random.PRNGKey(1), 40, cfg)
+    pos = np.asarray(labels) == 1
+    inside = float((frames * masks).sum() / np.maximum(masks.sum(), 1))
+    outside = float(frames[pos].mean())
+    assert inside > outside
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_adc_quantization_levels(bits):
+    x = jnp.linspace(0, 1.5, 1000)
+    q = adc.quantize(x, bits)
+    assert len(np.unique(np.asarray(q))) <= 2 ** bits
+    assert float(jnp.abs(q - x).max()) <= 1.5 / (2 ** bits - 1) / 2 + 1e-6
+
+
+def test_adc_codes_integer_range():
+    x = jax.random.uniform(jax.random.PRNGKey(2), (16, 16), maxval=1.5)
+    codes = adc.quantize_codes(x, 4)
+    assert codes.dtype == jnp.int32
+    assert int(codes.min()) >= 0 and int(codes.max()) <= 15
+
+
+def test_fragment_sampling_balanced_and_correct():
+    cfg = synthetic.RadarConfig(height=32, width=32)
+    frames, masks, _ = synthetic.make_dataset(jax.random.PRNGKey(3), 30,
+                                              cfg)
+    frags, labels = fragments.sample_fragments(
+        np.asarray(frames), np.asarray(masks), h=8, w=8, per_frame=2,
+        seed=0)
+    assert frags.shape[1:] == (8, 8)
+    assert abs(float(labels.mean()) - 0.5) < 1e-6    # exactly balanced
+
+
+def test_controller_hysteresis():
+    c = SensorController(ControllerConfig(hold_frames=2))
+    assert c.step(True) is True
+    assert c.step(False) is True      # hold 1
+    assert c.step(False) is True      # hold 2
+    assert c.step(False) is False     # off
+    c.reset()
+    assert c.step(False) is False
+
+
+def test_simulate_stream_counts():
+    frames = np.zeros((10, 4, 4), np.float32)
+    labels = np.array([0, 0, 1, 1, 0, 0, 0, 1, 0, 0])
+    # oracle gate: fire exactly on positives
+    stats = simulate_stream(lambda f: False, frames, labels,
+                            ControllerConfig(hold_frames=0))
+    assert stats.duty_cycle == 0.0
+    assert stats.missed_positive == 1.0
+    i = iter(labels)
+    stats = simulate_stream(lambda f: bool(next(i)), frames, labels,
+                            ControllerConfig(hold_frames=0))
+    assert stats.missed_positive == 0.0
+    assert stats.false_active == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Energy model
+# ---------------------------------------------------------------------------
+
+def test_energy_conventional_vs_hypersense():
+    p = energy.EnergyParams()
+    conv = energy.conventional(p)
+    ours = energy.hypersense(fpr=0.05, tpr=0.95, p_object=0.01, params=p)
+    s = energy.savings(ours, conv)
+    assert 0.5 < s["total_saving"] < 1.0
+    assert ours.total < conv.total
+
+
+@hypothesis.given(st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+                  st.floats(0.0, 0.5))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_energy_monotone_in_duty_cycle(fpr, tpr, p_obj):
+    """More gating-on -> more energy; never exceeds conventional+HDC."""
+    p = energy.EnergyParams()
+    base = energy.hypersense(0.0, 0.0, p_obj, p)
+    ours = energy.hypersense(fpr, tpr, p_obj, p)
+    full = energy.hypersense(1.0, 1.0, p_obj, p)
+    assert base.total <= ours.total + 1e-9 <= full.total + 1e-9
+    conv = energy.conventional(p)
+    assert full.total <= conv.total + p.hdc_accel_j + p.adc_lp_j + 1e-9
+
+
+def test_calibrated_energy_matches_table3():
+    p = energy.calibrate()
+    conv = energy.conventional(p)
+    for fpr, (tot, edge, ql) in energy.PAPER_TABLE_III.items():
+        ours = energy.hypersense(fpr, 1 - ql, 0.01, p)
+        s = energy.savings(ours, conv)
+        assert abs(s["total_saving"] - tot) < 0.03, fpr
+        assert abs(s["edge_saving"] - edge) < 0.03, fpr
+
+
+def test_compressive_sensing_between():
+    p = energy.EnergyParams()
+    conv, bdc = energy.conventional(p), energy.compressive_sensing(p)
+    assert bdc.total < conv.total
+    ours = energy.hypersense(0.05, 0.95, 0.01, p)
+    assert ours.total < bdc.total     # paper Fig. 17: ours < BDC < conv

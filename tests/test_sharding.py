@@ -1,0 +1,142 @@
+"""Logical-axis sharding rules engine + cell builders (no big compiles)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed import roofline as rl
+from repro.distributed import sharding as shlib
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1 real device: mesh (1, 1) exercises the rules code paths; axis
+    # sizes of 1 accept any dim, so specs resolve like the big mesh.
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_for_basic(mesh):
+    spec = shlib.spec_for((64, 128), ("embed", "mlp"), mesh)
+    assert spec == P("data", "model")
+
+
+def test_spec_for_drops_non_divisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # simulate divisibility drop via a fake 16-wide axis: use rules math
+    # directly through _axis_for
+    taken = set()
+    big_mesh_shape = {"data": 16, "model": 16}
+
+    class FakeMesh:
+        shape = big_mesh_shape
+
+    got = shlib._axis_for("mlp", dict(shlib.DEFAULT_RULES), FakeMesh(),
+                          24, taken)   # 24 % 16 != 0
+    assert got is None
+    got = shlib._axis_for("mlp", dict(shlib.DEFAULT_RULES), FakeMesh(),
+                          32, taken)
+    assert got == ("model",)
+
+
+def test_priority_resolution_kv_before_cache_seq():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    # kv divisible -> kv takes "model", cache_seq left unsharded
+    spec = shlib.spec_for((128, 32768, 16, 128),
+                          ("act_batch", "cache_seq", "act_kv_heads", None),
+                          FakeMesh())
+    assert spec[2] == "model" and spec[1] is None
+    # kv NOT divisible -> cache_seq takes "model"
+    spec = shlib.spec_for((128, 32768, 8, 128),
+                          ("act_batch", "cache_seq", "act_kv_heads", None),
+                          FakeMesh())
+    assert spec[2] is None and spec[1] == "model"
+
+
+def test_expert_cap_fallback():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    # 128 experts divide -> expert dim sharded
+    spec = shlib.spec_for((128, 2048, 512),
+                          ("act_expert", "act_expert_cap", None), FakeMesh())
+    assert spec[0] == "model" and spec[1] is None
+    # 8 experts don't -> capacity dim sharded instead
+    spec = shlib.spec_for((8, 2048, 512),
+                          ("act_expert", "act_expert_cap", None), FakeMesh())
+    assert spec[0] is None and spec[1] == "model"
+
+
+def test_no_mesh_is_noop():
+    x = jnp.zeros((4, 4))
+    y = shlib.shard(x, "act_batch", "act_seq")
+    assert y is x or (y == x).all()
+
+
+def test_use_mesh_context(mesh):
+    assert shlib.current_mesh() is None
+    with shlib.use_mesh(mesh):
+        assert shlib.current_mesh() is mesh
+        x = jnp.zeros((4, 8))
+        shlib.shard(x, "act_batch", None)   # must not raise
+    assert shlib.current_mesh() is None
+
+
+# ---------------------------------------------------------------------------
+# Roofline helpers
+# ---------------------------------------------------------------------------
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ar = bf16[16,1024]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[8,256]{1,0} all-gather(%y), dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%z)
+  %ars = bf16[16,1024]{1,0} all-reduce-start(%x)
+  %add = f32[8,256]{1,0} add(%a, %b)
+"""
+    got = rl.collective_bytes(hlo)
+    assert got["all-reduce"] == 16 * 1024 * 2 * 2   # incl. -start
+    assert got["all-gather"] == 8 * 256 * 4
+    assert got["collective-permute"] == 4 * 4 * 2
+    assert got["all-to-all"] == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = rl.Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                    hlo_gflops=1e6, hlo_gbytes=1e3, coll_gbytes=10.0,
+                    model_gflops=5e5)
+    assert r.t_compute == pytest.approx(1e15 / (256 * rl.PEAK_FLOPS))
+    assert r.t_collective == pytest.approx(10e9 / rl.ICI_BW)
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 < r.useful_flop_ratio <= 1.0
+
+
+def test_active_params_moe():
+    cfg = configs.get_config("qwen3-moe-235b-a22b")
+    from repro.models import common, lm
+    n = common.spec_param_count(lm.build(cfg).spec())
+    act = rl.active_params(cfg, n)
+    assert act < n * 0.2     # top-8 of 128 experts -> ~a22b of 235b
+    dense_cfg = configs.get_config("olmo-1b")
+    n2 = common.spec_param_count(lm.build(dense_cfg).spec())
+    assert rl.active_params(dense_cfg, n2) == n2
+
+
+def test_param_counts_match_reported_sizes():
+    """Total params should be in the ballpark the arch names claim."""
+    from repro.models import common, lm
+    expect = {"olmo-1b": (1.0e9, 1.6e9),
+              "deepseek-67b": (60e9, 72e9),
+              "grok-1-314b": (250e9, 340e9),
+              "qwen3-moe-235b-a22b": (180e9, 260e9),
+              "xlstm-350m": (0.25e9, 0.6e9),
+              "internlm2-1.8b": (1.5e9, 2.2e9)}
+    for arch, (lo, hi) in expect.items():
+        n = common.spec_param_count(lm.build(configs.get_config(arch)
+                                             ).spec())
+        assert lo <= n <= hi, (arch, n)

@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests for the paper's full system.
+
+The complete Intelligent Sensor Control loop on synthetic radar data:
+train gate -> pick operating point -> stream control -> energy accounting,
+plus kernel-path equivalence of the production scoring path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, fragment_model as fm, hypersense, metrics
+from repro.core.sensor_control import ControllerConfig, simulate_stream
+from repro.sensing import adc, fragments, synthetic
+
+jax.config.update("jax_platform_name", "cpu")
+
+FRAG, DIM, STRIDE = 8, 1024, 4
+
+
+def _train_gate(key, n_frames=40, size=32):
+    cfg = synthetic.RadarConfig(height=size, width=size)
+    frames, masks, labels = synthetic.make_dataset(key, n_frames, cfg)
+    frames_lp = adc.quantize(frames, 4)
+    frs, labs = fragments.sample_fragments(
+        np.asarray(frames_lp), np.asarray(masks), h=FRAG, w=FRAG,
+        per_frame=2, seed=0)
+    model, _ = fm.train_fragment_model(
+        jax.random.fold_in(key, 1), jnp.asarray(frs), jnp.asarray(labs),
+        dim=DIM, epochs=6)
+    B0 = model.B.reshape(FRAG, FRAG, -1)[:, 0, :]
+    return model, B0, cfg
+
+
+def test_end_to_end_sensor_control():
+    key = jax.random.PRNGKey(0)
+    model, B0, cfg = _train_gate(key)
+
+    hs = hypersense.from_fragment_model(model, B0, h=FRAG, w=FRAG,
+                                        stride=STRIDE)
+
+    # operating point from a validation set
+    vf, vm, vl = synthetic.make_dataset(jax.random.PRNGKey(5), 30, cfg)
+    vf = adc.quantize(vf, 4)
+    scores = np.asarray(hypersense.frame_scores_batch(hs, vf, 0))
+    fpr, tpr, thr = metrics.roc_curve(scores, np.asarray(vl))
+    assert metrics.auc(fpr, tpr) > 0.7, "gate must be informative"
+    t_score = metrics.threshold_at_fpr(fpr, tpr, thr, 0.2)
+    hs = hs._replace(t_score=float(t_score))
+
+    # stream control: rare events
+    stream, slabels = synthetic.make_stream(jax.random.PRNGKey(6), 120,
+                                            cfg, event_prob=0.05,
+                                            event_len=8)
+    stream = adc.quantize(stream, 4)
+    decide = jax.jit(lambda f: hypersense.detect(hs, f))
+    stats = simulate_stream(lambda f: bool(decide(f)), np.asarray(stream),
+                            np.asarray(slabels),
+                            ControllerConfig(hold_frames=2))
+
+    # the gate must save energy vs conventional while catching most events
+    p = energy.calibrate()
+    conv = energy.conventional(p)
+    ours = energy.hypersense(stats.false_active,
+                             1 - stats.missed_positive,
+                             float(np.mean(slabels)), p)
+    s = energy.savings(ours, conv)
+    assert s["total_saving"] > 0.2, s
+    assert stats.duty_cycle < 0.9
+    # the detector beats the trivial all-off gate on recall
+    assert stats.missed_positive < 0.8
+
+
+def test_kernel_path_matches_jnp_path():
+    """The Pallas production scoring path == pure-jnp reference path."""
+    key = jax.random.PRNGKey(1)
+    model, B0, cfg = _train_gate(key, n_frames=20)
+    frame = adc.quantize(
+        synthetic.render_frame(jax.random.PRNGKey(2), cfg, True)[0], 4)
+    hs = hypersense.from_fragment_model(model, B0, h=FRAG, w=FRAG,
+                                        stride=STRIDE)
+    s_jnp = hypersense.score_frame(hs, frame, backend="jnp")
+    s_pal = hypersense.score_frame(hs, frame, backend="pallas")
+    np.testing.assert_allclose(np.asarray(s_jnp), np.asarray(s_pal),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_low_precision_adc_does_not_break_gate():
+    """Paper premise: the HDC gate survives aggressive quantization."""
+    key = jax.random.PRNGKey(3)
+    model, B0, cfg = _train_gate(key)
+    hs = hypersense.from_fragment_model(model, B0, h=FRAG, w=FRAG,
+                                        stride=STRIDE)
+    vf, _, vl = synthetic.make_dataset(jax.random.PRNGKey(7), 30, cfg)
+    aucs = {}
+    for bits in [12, 4, 3]:
+        q = adc.quantize(vf, bits)
+        scores = np.asarray(hypersense.frame_scores_batch(hs, q, 0))
+        fpr, tpr, _ = metrics.roc_curve(scores, np.asarray(vl))
+        aucs[bits] = metrics.auc(fpr, tpr)
+    assert aucs[4] > 0.65
+    assert aucs[4] > aucs[12] - 0.2   # trained on 4-bit: robust there
