@@ -1,0 +1,14 @@
+.PHONY: test deps bench-stream bench
+
+deps:
+	pip install -r requirements-dev.txt
+
+# Tier-1 verify (ROADMAP.md): must pass on CPU.
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench-stream:
+	PYTHONPATH=src python benchmarks/stream_throughput.py
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run

@@ -114,14 +114,27 @@ def detect_batch(model: HyperSenseModel, frames: Array, *,
 def frame_scores_batch(model: HyperSenseModel, frames: Array,
                        t_detection: int | None = None, *,
                        backend: str = "jnp",
-                       sequential: bool = False) -> Array:
+                       sequential: bool = False,
+                       tiles=None) -> Array:
     """Frame-level ROC scores for a batch of frames -> ``(N,)`` float.
 
-    ``sequential=True`` scores frames one jit call at a time — use for
-    large D / many frames, where the vmapped rolled-product intermediate
-    (N x H x W x D) would blow host memory.
+    ``backend='pallas'`` (non-sequential) scores the whole batch in ONE
+    kernel launch via :func:`repro.kernels.ops.fragment_score_map_batch`,
+    reusing a single per-model tile precompute (pass ``tiles`` from
+    :func:`repro.kernels.ops.precompute_tiles` to amortize it across
+    calls). ``sequential=True`` scores frames one jit call at a time — use
+    for large D / many frames on the jnp path, where the vmapped
+    rolled-product intermediate (N x H x W x D) would blow host memory.
     """
     td = model.t_detection if t_detection is None else t_detection
+
+    if backend == "pallas" and not sequential:
+        from repro.kernels import ops as kops
+        maps = kops.fragment_score_map_batch(
+            frames, model.class_hvs, model.B0, model.b, h=model.h,
+            w=model.w, stride=model.stride,
+            nonlinearity=model.nonlinearity, tiles=tiles)   # (N, my, mx)
+        return jax.vmap(lambda m: frame_detection_score(m, td))(maps)
 
     def one(f):
         return frame_detection_score(

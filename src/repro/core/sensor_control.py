@@ -62,6 +62,22 @@ class SensorController:
         return False
 
 
+def stats_from(decisions: np.ndarray, gated: np.ndarray,
+               labels: np.ndarray) -> StreamStats:
+    """Accounting shared by every stream driver (frame-at-a-time and the
+    chunked-batched runtime must produce identical StreamStats)."""
+    labels = np.asarray(labels).astype(bool)
+    pos = max(int(labels.sum()), 1)
+    neg = max(int((~labels).sum()), 1)
+    return StreamStats(
+        decisions=decisions,
+        gated_on=gated,
+        duty_cycle=float(gated.mean()),
+        missed_positive=float((labels & ~gated).sum() / pos),
+        false_active=float((~labels & gated).sum() / neg),
+    )
+
+
 def simulate_stream(decide: Callable[[np.ndarray], bool],
                     frames: np.ndarray, labels: np.ndarray,
                     config: ControllerConfig | None = None) -> StreamStats:
@@ -79,13 +95,4 @@ def simulate_stream(decide: Callable[[np.ndarray], bool],
     for i in range(n):
         decisions[i] = bool(decide(frames[i]))
         gated[i] = ctrl.step(decisions[i])
-    labels = np.asarray(labels).astype(bool)
-    pos = max(int(labels.sum()), 1)
-    neg = max(int((~labels).sum()), 1)
-    return StreamStats(
-        decisions=decisions,
-        gated_on=gated,
-        duty_cycle=float(gated.mean()),
-        missed_positive=float((labels & ~gated).sum() / pos),
-        false_active=float((~labels & gated).sum() / neg),
-    )
+    return stats_from(decisions, gated, labels)

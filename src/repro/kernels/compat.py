@@ -1,0 +1,14 @@
+"""Version-compat shims for ``jax.experimental.pallas.tpu``.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` after
+jax 0.4.37; the kernels in this package are written against the new name.
+This module resolves whichever spelling the installed jax provides so the
+kernels import cleanly on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.encoding import NonLin
+from repro.kernels.compat import CompilerParams
 
 
 def _encode_kernel(x_ref, b_mat_ref, bias_ref, o_ref, acc_ref, *,
@@ -96,7 +97,7 @@ def hdc_encode(x: jax.Array, B: jax.Array, b: jax.Array, *,
         out_specs=pl.BlockSpec((bn, bd), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n_p, d_p), x.dtype),
         scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.encoding import SHIFT, NonLin
+from repro.kernels.compat import CompilerParams
 
 
 def _kernel(x_ref, b0p_ref, bias_ref, o_ref, acc_ref, btile_ref, *,
@@ -126,7 +127,7 @@ def hdc_encode_perm(x: jax.Array, B0: jax.Array, b: jax.Array, *, h: int,
         out_shape=jax.ShapeDtypeStruct((n_p, dim), x.dtype),
         scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32),
                         pltpu.VMEM((bk, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

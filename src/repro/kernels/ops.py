@@ -7,8 +7,6 @@ precompute cache used by the HyperSense scoring hot path.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -49,11 +47,6 @@ precompute_tiles = _ss.precompute_tiles
 ScoreTiles = _ss.ScoreTiles
 
 
-@functools.lru_cache(maxsize=8)
-def _cached_tiles(key):  # pragma: no cover - trivial cache shim
-    raise RuntimeError("use fragment_score_map / precompute_tiles directly")
-
-
 def fragment_score_map(frame: Array, class_hvs: Array, B0: Array, b: Array,
                        *, h: int, w: int, stride: int,
                        nonlinearity: NonLin = "rff",
@@ -72,3 +65,23 @@ def fragment_score_map(frame: Array, class_hvs: Array, B0: Array, b: Array,
     return _ss.fragment_scores(frame, tiles, h=h, w=w, stride=stride,
                                nonlinearity=nonlinearity,
                                interpret=_interpret())
+
+
+def fragment_score_map_batch(frames: Array, class_hvs: Array, B0: Array,
+                             b: Array, *, h: int, w: int, stride: int,
+                             nonlinearity: NonLin = "rff",
+                             tiles: _ss.ScoreTiles | None = None,
+                             block_d: int = 512) -> Array:
+    """(N, H, W) frames -> (N, my, mx) score maps in ONE kernel launch.
+
+    The streaming hot path: every frame in the chunk reuses the same
+    :class:`ScoreTiles` precompute. Pass ``tiles`` explicitly when scoring
+    many chunks with one model so the precompute is paid once.
+    """
+    W = frames.shape[-1]
+    if tiles is None:
+        tiles = _ss.precompute_tiles(B0, b, class_hvs, W=W, w=w,
+                                     stride=stride, block_d=block_d)
+    return _ss.fragment_scores_batch(frames, tiles, h=h, w=w, stride=stride,
+                                     nonlinearity=nonlinearity,
+                                     interpret=_interpret())

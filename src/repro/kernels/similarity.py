@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _sim_kernel(q_ref, c_ref, o_ref, dots_ref, qq_ref, cc_ref, *, n_d: int,
                 eps: float):
@@ -83,7 +85,7 @@ def similarity(queries: jax.Array, class_hvs: jax.Array, *,
             pltpu.VMEM((bn, 1), jnp.float32),
             pltpu.VMEM((1, c), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -23,9 +23,17 @@ fusing, per grid cell:
      sum-of-squares accumulate across D tiles; the cosine epilogue runs
      host-side on the tiny (my, mx) outputs.
 
-Grid: ``(my, n_dt)`` — fragment rows parallel, hyperdimension tiles as the
-sequential reduction. VMEM per step: slab (h, TD+W) + bias/class tiles
-(mx, TD) + P scratch (W+1, TD) + acc (mx, TD).
+Grid: ``(N, my, n_dt)`` — frames and fragment rows parallel, hyperdimension
+tiles as the sequential reduction. The batch axis is the streaming hot path:
+one ``pallas_call`` scores a whole chunk of frames against a single
+:class:`ScoreTiles` precompute (slabs/bias/class tiles are per-model, not
+per-frame), replacing O(N) kernel launches with one. VMEM per step: frame
+(H, W) + slab (h, TD+W) + bias/class tiles (mx, TD) + P scratch (W+1, TD) +
+acc (mx, TD) — independent of N.
+
+``fragment_scores`` (single frame) is a batch-of-1 call into the same
+kernel; ``fragment_scores_batch`` is the chunked entry point used by
+``repro.sensing.stream``.
 
 Precomputation (once per model, host-side): circularly padded base slabs
 and pre-rotated bias/class tiles — see :func:`precompute_tiles`.
@@ -42,6 +50,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.encoding import SHIFT, NonLin
+from repro.kernels.compat import CompilerParams
 
 Array = jax.Array
 
@@ -110,15 +119,20 @@ def window_norms(frame: Array, h: int, w: int, stride: int) -> Array:
     return jnp.sqrt(jnp.maximum(win, 1e-16))
 
 
+def window_norms_batch(frames: Array, h: int, w: int, stride: int) -> Array:
+    """(N, my, mx) sliding-window L2 norms for a stack of frames."""
+    return jax.vmap(lambda f: window_norms(f, h, w, stride))(frames)
+
+
 def _score_kernel(frame_ref, slab_ref, bias_ref, cpos_ref, cneg_ref,
                   norm_ref, dpos_ref, dneg_ref, qq_ref, p_ref, acc_ref, *,
                   h: int, w: int, stride: int, W: int, mx: int, td: int,
                   n_dt: int, nonlinearity: NonLin):
-    ky = pl.program_id(0)
+    ky = pl.program_id(1)
     acc_ref[...] = jnp.zeros_like(acc_ref)
 
     def row_body(r, _):
-        row = frame_ref[pl.ds(ky * stride + r, 1), :]        # (1, W)
+        row = frame_ref[0, pl.ds(ky * stride + r, 1), :]     # (1, W)
         row = row.astype(jnp.float32)
         slab = slab_ref[0, pl.ds(r, 1), :][0]
         slab = slab.astype(jnp.float32)                      # (TD + W - 1,)
@@ -148,7 +162,7 @@ def _score_kernel(frame_ref, slab_ref, bias_ref, cpos_ref, cneg_ref,
     jax.lax.fori_loop(0, h, row_body, 0)
 
     # normalization + nonlinearity + classifier dots (unrolled orientation)
-    norms = norm_ref[...].astype(jnp.float32)                # (1, mx)
+    norms = norm_ref[0].astype(jnp.float32)                  # (1, mx)
     s_n = acc_ref[...] / jnp.maximum(norms[0][:, None], 1e-8)
     bias = bias_ref[0]                                       # (mx, TD)
     if nonlinearity == "rff":
@@ -157,11 +171,11 @@ def _score_kernel(frame_ref, slab_ref, bias_ref, cpos_ref, cneg_ref,
         phi = jnp.sign(s_n)
     else:
         phi = s_n
-    dpos = jnp.sum(phi * cpos_ref[0], axis=1)[None, :]       # (1, mx)
-    dneg = jnp.sum(phi * cneg_ref[0], axis=1)[None, :]
-    qq = jnp.sum(phi * phi, axis=1)[None, :]
+    dpos = jnp.sum(phi * cpos_ref[0], axis=1)[None, None, :]  # (1, 1, mx)
+    dneg = jnp.sum(phi * cneg_ref[0], axis=1)[None, None, :]
+    qq = jnp.sum(phi * phi, axis=1)[None, None, :]
 
-    @pl.when(pl.program_id(1) == 0)
+    @pl.when(pl.program_id(2) == 0)
     def _init():
         dpos_ref[...] = jnp.zeros_like(dpos_ref)
         dneg_ref[...] = jnp.zeros_like(dneg_ref)
@@ -174,11 +188,17 @@ def _score_kernel(frame_ref, slab_ref, bias_ref, cpos_ref, cneg_ref,
 
 @functools.partial(jax.jit, static_argnames=("h", "w", "stride",
                                              "nonlinearity", "interpret"))
-def fragment_scores(frame: Array, tiles: ScoreTiles, *, h: int, w: int,
-                    stride: int, nonlinearity: NonLin = "rff",
-                    interpret: bool = False) -> Array:
-    """Frame -> (my, mx) fragment score map (sim(pos) - sim(neg))."""
-    H, W = frame.shape
+def fragment_scores_batch(frames: Array, tiles: ScoreTiles, *, h: int,
+                          w: int, stride: int,
+                          nonlinearity: NonLin = "rff",
+                          interpret: bool = False) -> Array:
+    """(N, H, W) frames -> (N, my, mx) score maps in one kernel launch.
+
+    The whole batch shares one :class:`ScoreTiles` precompute; the Pallas
+    grid is ``(N, my, n_dt)`` with the batch/row axes parallel and the
+    hyperdimension tiles as the sequential reduction.
+    """
+    N, H, W = frames.shape
     my = (H - h) // stride + 1
     mx = (W - w) // stride + 1
     n_dt, h_b, slab_len = tiles.slabs.shape
@@ -186,7 +206,7 @@ def fragment_scores(frame: Array, tiles: ScoreTiles, *, h: int, w: int,
     assert h_b == h and slab_len == td + W - 1, (tiles.slabs.shape, td, W)
     assert tiles.w == w and tiles.stride == stride
 
-    norms = window_norms(frame, h, w, stride)                # (my, mx)
+    norms = window_norms_batch(frames, h, w, stride)         # (N, my, mx)
 
     kern = functools.partial(
         _score_kernel, h=h, w=w, stride=stride, W=W, mx=mx, td=td,
@@ -194,31 +214,40 @@ def fragment_scores(frame: Array, tiles: ScoreTiles, *, h: int, w: int,
 
     dpos, dneg, qq = pl.pallas_call(
         kern,
-        grid=(my, n_dt),
+        grid=(N, my, n_dt),
         in_specs=[
-            pl.BlockSpec((H, W), lambda i, j: (0, 0)),           # frame
-            pl.BlockSpec((1, h, slab_len), lambda i, j: (j, 0, 0)),
-            pl.BlockSpec((1, mx, td), lambda i, j: (j, 0, 0)),   # bias
-            pl.BlockSpec((1, mx, td), lambda i, j: (j, 0, 0)),   # cpos
-            pl.BlockSpec((1, mx, td), lambda i, j: (j, 0, 0)),   # cneg
-            pl.BlockSpec((1, mx), lambda i, j: (i, 0)),          # norms
+            pl.BlockSpec((1, H, W), lambda n, i, j: (n, 0, 0)),    # frame
+            pl.BlockSpec((1, h, slab_len), lambda n, i, j: (j, 0, 0)),
+            pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0)),  # bias
+            pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0)),  # cpos
+            pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0)),  # cneg
+            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),   # norms
         ],
         out_specs=[
-            pl.BlockSpec((1, mx), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, mx), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, mx), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((my, mx), jnp.float32)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((N, my, mx), jnp.float32)] * 3,
         scratch_shapes=[
             pltpu.VMEM((W + 1, td), jnp.float32),
             pltpu.VMEM((mx, td), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(frame, tiles.slabs, tiles.bias_t, tiles.cpos_t, tiles.cneg_t, norms)
+    )(frames, tiles.slabs, tiles.bias_t, tiles.cpos_t, tiles.cneg_t, norms)
 
     qn = jnp.maximum(jnp.sqrt(qq), 1e-9)
     return (dpos / (qn * jnp.maximum(tiles.cpos_norm, 1e-9))
             - dneg / (qn * jnp.maximum(tiles.cneg_norm, 1e-9)))
+
+
+def fragment_scores(frame: Array, tiles: ScoreTiles, *, h: int, w: int,
+                    stride: int, nonlinearity: NonLin = "rff",
+                    interpret: bool = False) -> Array:
+    """Frame -> (my, mx) fragment score map (sim(pos) - sim(neg))."""
+    return fragment_scores_batch(frame[None], tiles, h=h, w=w,
+                                 stride=stride, nonlinearity=nonlinearity,
+                                 interpret=interpret)[0]

@@ -1,4 +1,6 @@
 """Sensing substrate: synthetic radar data, ADC simulation, fragment
-sampling, baseline detectors (CRUW stand-in; DESIGN.md §1)."""
+sampling, baseline detectors (CRUW stand-in; DESIGN.md §1), and the
+batched streaming runtime (:mod:`repro.sensing.stream`)."""
 
-from repro.sensing import adc, baselines, fragments, synthetic  # noqa: F401
+from repro.sensing import (adc, baselines, fragments, stream,  # noqa: F401
+                           synthetic)

@@ -1,0 +1,183 @@
+"""Batched streaming runtime: chunked scoring + gating (one jit per chunk).
+
+The paper's sensing loop (§III-B/C) scores *every* incoming frame with the
+HDC HyperSense model and gates the expensive high-precision path in real
+time. ``repro.core.sensor_control.simulate_stream`` does that one frame per
+call — one kernel launch (or one jnp dispatch) per frame. This module is
+the throughput path: frames are consumed in fixed-size chunks and each
+chunk runs
+
+  batched fragment scoring  ->  frame_detection_score  ->  threshold
+  ->  SensorController hysteresis (as a ``lax.scan``)
+
+inside a single jitted step. On the ``pallas`` backend the whole chunk is
+ONE kernel launch (grid ``(N, my, n_dt)``) against one per-model
+:class:`~repro.kernels.sliding_scores.ScoreTiles` precompute.
+
+:func:`gate_scan` is the exact jnp twin of
+:class:`~repro.core.sensor_control.SensorController`; the carried ``hold``
+state crosses chunk boundaries, so chunking is invisible:
+:func:`simulate_stream_batched` returns :class:`StreamStats` identical to
+the frame-at-a-time ``simulate_stream``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hypersense
+from repro.core.hypersense import HyperSenseModel, frame_detection_score
+from repro.core.sensor_control import (ControllerConfig, StreamStats,
+                                       stats_from)
+
+Array = jax.Array
+
+
+def gate_scan(decisions: Array, hold_frames: int,
+              init_hold: Array | int = 0) -> tuple[Array, Array]:
+    """Jittable ``SensorController``: ``(gated (N,) bool, holds (N,) i32)``.
+
+    ``holds[i]`` is the controller state *after* frame ``i`` — feed
+    ``holds[last_real_frame]`` back as ``init_hold`` of the next chunk.
+    """
+    def step(hold, fired):
+        gated = fired | (hold > 0)
+        hold = jnp.where(fired, hold_frames, jnp.maximum(hold - 1, 0))
+        return hold, (gated, hold)
+
+    _, (gated, holds) = jax.lax.scan(
+        step, jnp.asarray(init_hold, jnp.int32), decisions.astype(bool))
+    return gated, holds
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w", "stride",
+                                             "nonlinearity", "t_detection",
+                                             "hold_frames", "backend"))
+def _chunk_step(frames, class_hvs, B0, b, tiles, t_score, hold, n_valid, *,
+                h, w, stride, nonlinearity, t_detection, hold_frames,
+                backend):
+    """One jitted streaming step over a fixed-size chunk.
+
+    ``n_valid`` masks a padded tail chunk; pad frames never fire, and the
+    carried hold state is read at the last *valid* frame.
+    """
+    N, H, W = frames.shape
+    my = (H - h) // stride + 1
+    mx = (W - w) // stride + 1
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        maps = kops.fragment_score_map_batch(
+            frames, class_hvs, B0, b, h=h, w=w, stride=stride,
+            nonlinearity=nonlinearity, tiles=tiles)          # (N, my, mx)
+    else:
+        maps = jax.vmap(lambda f: hypersense.fragment_score_map(
+            f, class_hvs, B0, b, h=h, w=w, stride=stride,
+            nonlinearity=nonlinearity, backend=backend))(frames)
+
+    scores = jax.vmap(
+        lambda m: frame_detection_score(m, t_detection))(maps)  # (N,)
+
+    # count(s_i > t) > T  <=>  (T+1)-th largest > t, provided T < my*mx;
+    # with T >= my*mx the count can never exceed T -> never fires.
+    valid = jnp.arange(N) < n_valid
+    if t_detection >= my * mx:
+        fired = jnp.zeros((N,), bool)
+    else:
+        fired = (scores > t_score) & valid
+
+    gated, holds = gate_scan(fired, hold_frames, hold)
+    hold_out = jnp.where(n_valid > 0,
+                         holds[jnp.maximum(n_valid - 1, 0)], hold)
+    return scores, fired, gated, hold_out
+
+
+class StreamRunner:
+    """Stateful chunked scorer+gate. ``process(frames)`` any number of times.
+
+    The controller ``hold`` state carries across ``process`` calls, so a
+    long stream can be fed incrementally in arbitrary slices; every
+    internal step is one fixed-shape jit call (tail chunks are padded and
+    masked, so no recompiles).
+    """
+
+    def __init__(self, model: HyperSenseModel,
+                 config: ControllerConfig | None = None, *,
+                 chunk_size: int = 32, backend: str = "jnp",
+                 t_detection: int | None = None, block_d: int = 512):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        self.model = model
+        self.config = config or ControllerConfig()
+        self.chunk_size = chunk_size
+        self.backend = backend
+        self.block_d = block_d
+        self.t_detection = (model.t_detection if t_detection is None
+                            else t_detection)
+        self._tiles = None      # (W, ScoreTiles) — keyed on frame width
+        self._hold = jnp.zeros((), jnp.int32)
+
+    def reset(self) -> None:
+        self._hold = jnp.zeros((), jnp.int32)
+
+    def _ensure_tiles(self, W: int):
+        if self.backend != "pallas":
+            return None
+        if self._tiles is None or self._tiles[0] != W:
+            from repro.kernels import ops as kops
+            self._tiles = (W, kops.precompute_tiles(
+                self.model.B0, self.model.b, self.model.class_hvs, W=W,
+                w=self.model.w, stride=self.model.stride,
+                block_d=self.block_d))
+        return self._tiles[1]
+
+    def process(self, frames) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(n, H, W) frames -> (scores (n,), fired (n,), gated (n,))."""
+        frames = jnp.asarray(frames)
+        n = frames.shape[0]
+        m = self.model
+        tiles = self._ensure_tiles(frames.shape[-1])
+        scores = np.empty(n, np.float32)
+        fired = np.empty(n, bool)
+        gated = np.empty(n, bool)
+        for start in range(0, n, self.chunk_size):
+            chunk = frames[start:start + self.chunk_size]
+            n_valid = chunk.shape[0]
+            if n_valid < self.chunk_size:
+                pad = self.chunk_size - n_valid
+                chunk = jnp.pad(chunk, ((0, pad), (0, 0), (0, 0)))
+            s, f, g, self._hold = _chunk_step(
+                chunk, m.class_hvs, m.B0, m.b, tiles,
+                jnp.float32(m.t_score), self._hold, jnp.int32(n_valid),
+                h=m.h, w=m.w, stride=m.stride,
+                nonlinearity=m.nonlinearity, t_detection=self.t_detection,
+                hold_frames=self.config.hold_frames, backend=self.backend)
+            sl = slice(start, start + n_valid)
+            scores[sl] = np.asarray(s)[:n_valid]
+            fired[sl] = np.asarray(f)[:n_valid]
+            gated[sl] = np.asarray(g)[:n_valid]
+        return scores, fired, gated
+
+
+def simulate_stream_batched(model: HyperSenseModel, frames, labels,
+                            config: ControllerConfig | None = None, *,
+                            chunk_size: int = 32, backend: str = "jnp",
+                            t_detection: int | None = None,
+                            block_d: int = 512) -> StreamStats:
+    """Chunked-batched twin of ``sensor_control.simulate_stream``.
+
+    Produces identical :class:`StreamStats` to replaying
+    ``hypersense.detect`` frame-at-a-time through ``SensorController``,
+    but runs ``len(frames)/chunk_size`` jitted steps instead of
+    ``len(frames)`` dispatches (one kernel launch per chunk on the
+    ``pallas`` backend).
+    """
+    runner = StreamRunner(model, config, chunk_size=chunk_size,
+                          backend=backend, t_detection=t_detection,
+                          block_d=block_d)
+    _, fired, gated = runner.process(frames)
+    return stats_from(fired, gated, labels)

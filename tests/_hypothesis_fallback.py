@@ -1,0 +1,102 @@
+"""Minimal stand-in for ``hypothesis`` so tests collect without the dep.
+
+The real library is preferred (``requirements-dev.txt`` pins it); this
+fallback keeps the property tests *running* — not skipped — in
+environments where it cannot be installed. It implements exactly the API
+surface these tests use:
+
+  hypothesis.given / settings / assume
+  strategies.integers / floats / booleans / sampled_from
+
+``given`` replays each test ``max_examples`` times with deterministic
+draws: the first two examples hit the strategy boundaries (min/max, first/
+last), the rest are seeded-random. No shrinking, no database — boundary +
+random replay is enough to keep the invariants exercised.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)``; the current example is discarded."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Strategy:
+    def __init__(self, boundaries, draw):
+        self._boundaries = list(boundaries)
+        self._draw = draw
+
+    def example(self, rng: random.Random, index: int):
+        if index < len(self._boundaries):
+            return self._boundaries[index]
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy([min_value, max_value],
+                     lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy([min_value, max_value],
+                     lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy([elements[0], elements[-1]],
+                     lambda rng: rng.choice(elements))
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def apply(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(*strategies):
+    def decorate(fn):
+        # NOT functools.wraps: pytest must see a () signature, or it would
+        # try to resolve the generated arguments as fixtures.
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(
+                wrapper, "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", 20))
+            rng = random.Random(0x48440)  # deterministic across runs
+            ran = 0
+            for i in range(max_examples):
+                values = [s.example(rng, i) for s in strategies]
+                try:
+                    fn(*args, *values, **kwargs)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+            assert ran > 0, "every generated example was rejected by assume"
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return decorate
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans,
+    sampled_from=sampled_from)
+
+hypothesis = types.SimpleNamespace(
+    given=given, settings=settings, assume=assume, strategies=strategies)
+
+st = strategies

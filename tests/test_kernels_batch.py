@@ -1,0 +1,163 @@
+"""Batched sliding-scores kernel: parity vs per-frame and pure-jnp paths.
+
+The batched kernel (grid ``(N, my, n_dt)``) must agree with (a) the
+per-frame kernel it generalizes, and (b) the pure-jnp
+``fragment_score_map`` oracle — across dtypes, strides, and non-divisible
+``D % block_d``. Plus edge cases of ``frame_detection_score``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding, hypersense
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels import sliding_scores as k_ss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("stride", [1, 2, 4])
+def test_batch_matches_per_frame_and_jnp(stride, dtype):
+    N, H, W, D, h, w = 5, 18, 22, 64, 4, 5
+    frames = jax.random.uniform(key(0), (N, H, W), dtype=jnp.float32)
+    frames = frames.astype(dtype)
+    B0, b = encoding.make_perm_base_rows(key(1), h, D)
+    C = jax.random.normal(key(2), (2, D))
+    tiles = k_ss.precompute_tiles(B0, b, C, W=W, w=w, stride=stride,
+                                  block_d=32)
+    got = k_ss.fragment_scores_batch(frames, tiles, h=h, w=w, stride=stride,
+                                     interpret=True)
+    assert got.shape[0] == N
+    for i in range(N):
+        per_frame = k_ss.fragment_scores(frames[i], tiles, h=h, w=w,
+                                         stride=stride, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[i]),
+                                   np.asarray(per_frame),
+                                   rtol=1e-6, atol=1e-6)
+        want = hypersense.fragment_score_map(
+            frames[i].astype(jnp.float32), C, B0, b, h=h, w=w,
+            stride=stride, backend="jnp")
+        np.testing.assert_allclose(np.asarray(got[i], np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+
+@pytest.mark.parametrize("block_d", [1000, 48])
+def test_batch_non_divisible_block_d(block_d):
+    """D % block_d != 0 collapses to a single D tile (and still matches)."""
+    N, H, W, D, h, w, stride = 3, 14, 16, 96, 3, 4, 2
+    frames = jax.random.uniform(key(3), (N, H, W))
+    B0, b = encoding.make_perm_base_rows(key(4), h, D)
+    C = jax.random.normal(key(5), (2, D))
+    tiles = k_ss.precompute_tiles(B0, b, C, W=W, w=w, stride=stride,
+                                  block_d=block_d)
+    got = k_ss.fragment_scores_batch(frames, tiles, h=h, w=w, stride=stride,
+                                     interpret=True)
+    for i in range(N):
+        want = ref.fragment_scores(frames[i], C, B0, b, h=h, w=w,
+                                   stride=stride)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("nonlin", ["rff", "linear"])
+def test_batch_nonlinearities(nonlin):
+    N, H, W, D, h, w = 2, 12, 16, 96, 3, 4
+    frames = jax.random.uniform(key(6), (N, H, W))
+    B0, b = encoding.make_perm_base_rows(key(7), h, D)
+    C = jax.random.normal(key(8), (2, D))
+    tiles = k_ss.precompute_tiles(B0, b, C, W=W, w=w, stride=1, block_d=48)
+    got = k_ss.fragment_scores_batch(frames, tiles, h=h, w=w, stride=1,
+                                     nonlinearity=nonlin, interpret=True)
+    for i in range(N):
+        want = ref.fragment_scores(frames[i], C, B0, b, h=h, w=w, stride=1,
+                                   nonlinearity=nonlin)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_batch_of_one_equals_single():
+    H, W, D, h, w, stride = 14, 14, 64, 3, 3, 1
+    frame = jax.random.uniform(key(9), (H, W))
+    B0, b = encoding.make_perm_base_rows(key(10), h, D)
+    C = jax.random.normal(key(11), (2, D))
+    tiles = k_ss.precompute_tiles(B0, b, C, W=W, w=w, stride=stride)
+    batched = k_ss.fragment_scores_batch(frame[None], tiles, h=h, w=w,
+                                         stride=stride, interpret=True)
+    single = k_ss.fragment_scores(frame, tiles, h=h, w=w, stride=stride,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(batched[0]),
+                                  np.asarray(single))
+
+
+def test_window_norms_batch_matches_per_frame():
+    frames = jax.random.normal(key(12), (4, 20, 24))
+    got = k_ss.window_norms_batch(frames, 5, 6, 2)
+    for i in range(4):
+        want = k_ss.window_norms(frames[i], 5, 6, 2)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_ops_fragment_score_map_batch_matches_jnp():
+    N, H, W, D, h, w, stride = 4, 14, 14, 64, 3, 3, 1
+    frames = jax.random.uniform(key(13), (N, H, W))
+    B0, b = encoding.make_perm_base_rows(key(14), h, D)
+    C = jax.random.normal(key(15), (2, D))
+    got = ops.fragment_score_map_batch(frames, C, B0, b, h=h, w=w,
+                                       stride=stride)
+    for i in range(N):
+        want = hypersense.fragment_score_map(frames[i], C, B0, b, h=h, w=w,
+                                             stride=stride, backend="jnp")
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_frame_scores_batch_pallas_backend_matches_jnp():
+    N, H, W, D, h, w, stride = 6, 14, 14, 64, 3, 3, 2
+    frames = jax.random.uniform(key(16), (N, H, W))
+    B0, b = encoding.make_perm_base_rows(key(17), h, D)
+    C = jax.random.normal(key(18), (2, D))
+    model = hypersense.HyperSenseModel(C, B0, b, h, w, stride,
+                                       t_score=0.0, t_detection=2)
+    got = hypersense.frame_scores_batch(model, frames, backend="pallas")
+    want = hypersense.frame_scores_batch(model, frames, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# frame_detection_score edge cases
+# ---------------------------------------------------------------------------
+
+def test_frame_detection_score_t_at_least_num_fragments_clamps():
+    """t_detection >= #fragments clamps to the minimum (ROC stays defined)."""
+    scores = jnp.asarray([[3.0, 1.0], [2.0, 4.0]])
+    for td in (4, 5, 100):
+        got = hypersense.frame_detection_score(scores, td)
+        assert float(got) == 1.0  # smallest fragment score
+
+
+def test_frame_detection_score_all_equal():
+    scores = jnp.full((3, 3), 0.25)
+    for td in (0, 4, 8, 20):
+        assert float(hypersense.frame_detection_score(scores, td)) == 0.25
+
+
+def test_frame_detection_score_order_statistic():
+    scores = jnp.asarray([[0.75, -0.5], [0.125, 0.25]])
+    assert float(hypersense.frame_detection_score(scores, 0)) == 0.75
+    assert float(hypersense.frame_detection_score(scores, 1)) == 0.25
+    assert float(hypersense.frame_detection_score(scores, 3)) == -0.5

@@ -1,0 +1,146 @@
+"""Streaming runtime: chunked batched path == frame-at-a-time reference.
+
+A deterministic synthetic stream through chunked scoring +
+``SensorController`` gating must produce *identical* ``StreamStats`` to the
+existing per-frame ``simulate_stream``; the ``gate_scan`` hysteresis must
+match the stateful controller bit-for-bit; and chunk size must be
+invisible (including non-divisible tails and state across ``process``
+calls).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding, hypersense
+from repro.core.sensor_control import (ControllerConfig, SensorController,
+                                       simulate_stream)
+from repro.sensing import synthetic
+from repro.sensing.stream import (StreamRunner, gate_scan,
+                                  simulate_stream_batched)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+def make_model(h=6, w=6, stride=3, D=128, t_score=0.0, t_detection=2):
+    B0, b = encoding.make_perm_base_rows(key(1), h, D)
+    C = jax.random.normal(key(2), (2, D))
+    return hypersense.HyperSenseModel(C, B0, b, h, w, stride,
+                                      t_score=t_score,
+                                      t_detection=t_detection)
+
+
+# ---------------------------------------------------------------------------
+# gate_scan == SensorController
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hold", [0, 1, 3, 7])
+def test_gate_scan_matches_controller(hold):
+    rng = np.random.RandomState(hold)
+    fired = rng.rand(300) < 0.15
+    ctrl = SensorController(ControllerConfig(hold_frames=hold))
+    want = np.array([ctrl.step(bool(f)) for f in fired])
+    got, holds = gate_scan(jnp.asarray(fired), hold)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # resuming from an intermediate hold state must continue identically
+    cut = 117
+    got_a, holds_a = gate_scan(jnp.asarray(fired[:cut]), hold)
+    got_b, _ = gate_scan(jnp.asarray(fired[cut:]), hold, holds_a[-1])
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(got_a), np.asarray(got_b)]), want)
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming == frame-at-a-time simulate_stream
+# ---------------------------------------------------------------------------
+
+def _reference_stats(model, frames, labels, config):
+    decide = jax.jit(lambda f: hypersense.detect(model, f))
+    return simulate_stream(lambda f: bool(decide(f)), np.asarray(frames),
+                           np.asarray(labels), config)
+
+
+@pytest.mark.parametrize("chunk_size", [1, 5, 16, 64])
+def test_batched_stream_matches_reference(chunk_size):
+    model = make_model()
+    cfg = synthetic.RadarConfig(height=24, width=24)
+    frames, _, labels = synthetic.make_dataset(key(3), 41, cfg)
+    config = ControllerConfig(hold_frames=2)
+    ref = _reference_stats(model, frames, labels, config)
+    got = simulate_stream_batched(model, frames, labels, config,
+                                  chunk_size=chunk_size, backend="jnp")
+    np.testing.assert_array_equal(got.decisions, ref.decisions)
+    np.testing.assert_array_equal(got.gated_on, ref.gated_on)
+    assert got.duty_cycle == ref.duty_cycle
+    assert got.missed_positive == ref.missed_positive
+    assert got.false_active == ref.false_active
+
+
+def test_batched_stream_pallas_backend_matches_reference():
+    model = make_model()
+    cfg = synthetic.RadarConfig(height=24, width=24)
+    frames, _, labels = synthetic.make_dataset(key(4), 19, cfg)
+    config = ControllerConfig(hold_frames=1)
+    ref = _reference_stats(model, frames, labels, config)
+    got = simulate_stream_batched(model, frames, labels, config,
+                                  chunk_size=8, backend="pallas",
+                                  block_d=64)
+    np.testing.assert_array_equal(got.decisions, ref.decisions)
+    np.testing.assert_array_equal(got.gated_on, ref.gated_on)
+
+
+def test_t_detection_beyond_fragment_count_never_fires():
+    """detect() can never fire when t_detection >= my*mx; stream agrees."""
+    model = make_model(t_detection=10_000)
+    cfg = synthetic.RadarConfig(height=24, width=24)
+    frames, _, labels = synthetic.make_dataset(key(5), 9, cfg)
+    got = simulate_stream_batched(model, frames, labels,
+                                  ControllerConfig(hold_frames=2),
+                                  chunk_size=4, backend="jnp")
+    assert not got.decisions.any()
+    assert not got.gated_on.any()
+    ref = _reference_stats(model, frames, labels,
+                           ControllerConfig(hold_frames=2))
+    np.testing.assert_array_equal(got.decisions, ref.decisions)
+
+
+def test_runner_state_carries_across_process_calls():
+    """Feeding the stream in arbitrary slices == feeding it at once."""
+    model = make_model()
+    cfg = synthetic.RadarConfig(height=24, width=24)
+    frames, _, _ = synthetic.make_dataset(key(6), 23, cfg)
+    whole = StreamRunner(model, ControllerConfig(hold_frames=3),
+                         chunk_size=8)
+    s_all, f_all, g_all = whole.process(frames)
+    split = StreamRunner(model, ControllerConfig(hold_frames=3),
+                         chunk_size=8)
+    parts = [split.process(frames[a:z])
+             for a, z in [(0, 7), (7, 10), (10, 23)]]
+    np.testing.assert_allclose(np.concatenate([p[0] for p in parts]), s_all,
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.concatenate([p[1] for p in parts]),
+                                  f_all)
+    np.testing.assert_array_equal(np.concatenate([p[2] for p in parts]),
+                                  g_all)
+
+
+def test_runner_reset():
+    model = make_model(t_detection=0, t_score=-10.0)  # fires on everything
+    frames = jnp.asarray(np.random.RandomState(0).rand(4, 24, 24),
+                         jnp.float32)
+    r = StreamRunner(model, ControllerConfig(hold_frames=3), chunk_size=4)
+    _, fired, _ = r.process(frames)
+    assert fired.all()
+    assert int(np.asarray(r._hold)) == 3
+    r.reset()
+    assert int(np.asarray(r._hold)) == 0
+
+
+def test_runner_rejects_bad_chunk_size():
+    with pytest.raises(ValueError):
+        StreamRunner(make_model(), chunk_size=0)

@@ -2,8 +2,11 @@
 
 import os
 
-import hypothesis
-import hypothesis.strategies as st
+try:  # prefer the real library when installed (requirements-dev.txt)
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # fallback keeps these tests running without the dep
+    from _hypothesis_fallback import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
