@@ -1,4 +1,4 @@
-.PHONY: test deps bench-stream bench
+.PHONY: test test-multidevice deps bench-stream bench-fleet bench
 
 deps:
 	pip install -r requirements-dev.txt
@@ -7,8 +7,17 @@ deps:
 test:
 	PYTHONPATH=src python -m pytest -x -q
 
+# shard_map / sensor-axis sharding against a real 8-device host mesh.
+test-multidevice:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+	python -m pytest -x -q tests/test_fleet.py tests/test_sharding.py \
+	tests/test_stream.py
+
 bench-stream:
 	PYTHONPATH=src python benchmarks/stream_throughput.py
+
+bench-fleet:
+	PYTHONPATH=src python benchmarks/fleet_throughput.py
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

@@ -1,0 +1,140 @@
+"""Fleet scoring throughput: batched super-chunks vs a loop of runners.
+
+The tentpole measurement for the multi-sensor runtime: total frames/sec of
+S concurrent sensor streams under two execution strategies:
+
+* ``looped-runners`` — a Python loop over S independent ``StreamRunner``
+  instances, i.e. S jitted steps (S kernel launches on the ``pallas``
+  backend) per chunk interval — the pre-fleet way to serve S sensors;
+* ``fleet-batched``  — one ``FleetRunner`` consuming ``(S, C, H, W)``
+  super-chunks: the S*C axis is flattened into a single kernel grid, ONE
+  launch per super-chunk, one shared ScoreTiles precompute, and one
+  vmapped ``gate_scan`` carrying all S hold states.
+
+Both paths produce identical per-stream results (tests/test_fleet.py);
+this benchmark measures only the dispatch/batching win. On CPU the pallas
+paths run in interpret mode, so absolute numbers are small; the *ratio*
+fleet/looped is the claim being checked (``--check`` enforces it at
+S >= 4). On TPU the same code compiles and the gap widens.
+
+Run:  PYTHONPATH=src python benchmarks/fleet_throughput.py [--sensors 4]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core import hypersense
+from repro.core.encoding import make_perm_base_rows
+from repro.core.sensor_control import ControllerConfig
+from repro.sensing.fleet import FleetRunner
+from repro.sensing.stream import StreamRunner
+
+# CPU-tractable scale (interpret mode executes grid steps in Python).
+SENSORS = 4
+FRAMES = 16          # per stream, per timed pass
+CHUNK = 4            # small chunks -> more launches -> the amortization
+                     # (the thing being measured) dominates the pass
+FRAME = 32
+FRAG = 8
+STRIDE = 8           # small (my, n_dt) grid keeps per-launch work low, so
+DIM = 256            # the S-fold launch fan-in is what gets measured
+BLOCK_D = 256
+REPS = 3
+
+
+def _make_model(dim: int, frag: int, stride: int):
+    B0, b = make_perm_base_rows(jax.random.PRNGKey(0), frag, dim)
+    C = jax.random.normal(jax.random.PRNGKey(1), (2, dim))
+    return hypersense.HyperSenseModel(C, B0, b, frag, frag, stride,
+                                      t_score=0.0, t_detection=2)
+
+
+def _time(fn, reps: int = REPS) -> float:
+    """Best-of-N wall time: min suppresses scheduler noise on shared CPUs."""
+    fn()  # warmup: jit compile + tiles precompute
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(sensors: int = SENSORS, n_frames: int = FRAMES, chunk: int = CHUNK,
+        frame: int = FRAME, frag: int = FRAG, stride: int = STRIDE,
+        dim: int = DIM, backend: str = "pallas", reps: int = REPS):
+    model = _make_model(dim, frag, stride)
+    config = ControllerConfig(hold_frames=3)
+    frames = jax.random.uniform(jax.random.PRNGKey(2),
+                                (sensors, n_frames, frame, frame))
+    total = sensors * n_frames
+
+    runners = [StreamRunner(model, config, chunk_size=chunk,
+                            backend=backend, block_d=BLOCK_D)
+               for _ in range(sensors)]
+    fleet = FleetRunner(model, config, chunk_size=chunk, backend=backend,
+                        block_d=BLOCK_D)
+
+    def looped():
+        for s, r in enumerate(runners):
+            r.process(frames[s])
+
+    def batched():
+        fleet.process(frames)
+
+    rows = []
+    fps = {}
+    for name, fn in [("looped-runners", looped),
+                     ("fleet-batched", batched)]:
+        dt = _time(fn, reps)
+        fps[name] = total / dt
+        rows.append({"name": f"fleet_throughput/{name}",
+                     "frames_per_sec": f"{fps[name]:.1f}",
+                     "ms_per_pass": f"{dt * 1e3:.1f}",
+                     "sensors": sensors, "backend": backend})
+    rows.append({"name": "fleet_throughput/fleet_vs_looped_speedup",
+                 "value": f"{fps['fleet-batched'] / fps['looped-runners']:.2f}x",
+                 "sensors": sensors, "backend": backend})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sensors", type=int, default=SENSORS,
+                    help="number of concurrent sensor streams S")
+    ap.add_argument("--frames", type=int, default=FRAMES,
+                    help="frames per stream per timed pass")
+    ap.add_argument("--chunk", type=int, default=CHUNK)
+    ap.add_argument("--frame-size", type=int, default=FRAME)
+    ap.add_argument("--frag", type=int, default=FRAG)
+    ap.add_argument("--stride", type=int, default=STRIDE)
+    ap.add_argument("--dim", type=int, default=DIM)
+    ap.add_argument("--backend", default="pallas",
+                    choices=["pallas", "jnp"])
+    ap.add_argument("--reps", type=int, default=REPS)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless fleet-batched >= "
+                         "looped-runners frames/sec (the fleet batching "
+                         "claim; use --sensors >= 4)")
+    args = ap.parse_args()
+    rows = run(args.sensors, args.frames, args.chunk, args.frame_size,
+               args.frag, args.stride, args.dim, args.backend, args.reps)
+    fps = {}
+    for row in rows:
+        name = row.pop("name")
+        if "frames_per_sec" in row:
+            fps[name.split("/")[-1]] = float(row["frames_per_sec"])
+        print(name + "," + ",".join(f"{k}={v}" for k, v in row.items()))
+    if args.check and fps["fleet-batched"] < fps["looped-runners"]:
+        raise SystemExit(
+            f"REGRESSION: fleet-batched {fps['fleet-batched']:.1f} fps < "
+            f"looped-runners {fps['looped-runners']:.1f} fps at "
+            f"S={args.sensors}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,19 @@
 sensor stream -> low-precision ADC -> HDC HyperSense gate -> high-precision
 path + "cloud model" only when gated on -> energy accounting (Fig. 17).
 
-Run:  PYTHONPATH=src python examples/intelligent_sensing_e2e.py
+Single-sensor by default; ``--sensors S`` runs the same trained gate over
+S concurrent streams through the fleet runtime
+(:mod:`repro.sensing.fleet`): every super-chunk is scored in one batched
+step (one kernel launch on ``--backend pallas``), each stream keeps its
+own controller hysteresis, and the energy account aggregates the fleet.
+The ADC sits *inside* the runtime (``adc_bits=4``) — the gate scores the
+cheap 4-bit capture while the raw high-precision frames stand in for what
+the gated-on path would deliver.
+
+Run:  PYTHONPATH=src python examples/intelligent_sensing_e2e.py [--sensors 4]
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -13,15 +24,13 @@ import numpy as np
 from repro.core import energy, fragment_model as fm, hypersense, metrics
 from repro.core.sensor_control import ControllerConfig
 from repro.sensing import adc, fragments, synthetic
+from repro.sensing.fleet import simulate_fleet
 from repro.sensing.stream import simulate_stream_batched
 
 
-def main() -> None:
-    key = jax.random.PRNGKey(0)
-    frag, dim, stride = 16, 2048, 8
-
-    # --- train the gate on captured data --------------------------------
-    cfg = synthetic.RadarConfig(height=64, width=64)
+def train_gate(key, cfg, frag, dim, stride):
+    """Train the Fragment model on low-precision captures and pick the
+    operating T_score for a target FPR (paper §III-C)."""
     frames, masks, _ = synthetic.make_dataset(key, 60, cfg)
     frames_lp = adc.quantize(frames, 4)
     frs, labs = fragments.sample_fragments(
@@ -32,8 +41,7 @@ def main() -> None:
         dim=dim, epochs=10)
     B0 = model.B.reshape(frag, frag, -1)[:, 0, :]
 
-    # --- pick the operating point for a target FPR ----------------------
-    te_frames, te_masks, te_labels = synthetic.make_dataset(
+    te_frames, _, te_labels = synthetic.make_dataset(
         jax.random.PRNGKey(2), 24, cfg)
     te_lp = adc.quantize(te_frames, 4)
     hs = hypersense.from_fragment_model(model, B0, h=frag, w=frag,
@@ -45,36 +53,75 @@ def main() -> None:
     t_score = metrics.threshold_at_fpr(fpr, tpr, thr, target_fpr)
     print(f"operating point: FPR<={target_fpr} -> T_score={t_score:.4f} "
           f"TPR={metrics.tpr_at_fpr(fpr, tpr, target_fpr):.3f}")
-    hs = hs._replace(t_score=float(t_score))
+    return hs._replace(t_score=float(t_score))
 
-    # --- stream with infrequent events through the controller -----------
-    # Chunked batched runtime: each 32-frame chunk is scored in one jitted
-    # step (one kernel launch on the pallas backend) and gated through the
-    # SensorController hysteresis — identical StreamStats to the
-    # frame-at-a-time loop, at a fraction of the dispatches.
-    stream, stream_labels = synthetic.make_stream(
-        jax.random.PRNGKey(3), 150, cfg, event_prob=0.03, event_len=10)
-    stream_lp = adc.quantize(stream, 4)
 
-    stats = simulate_stream_batched(hs, stream_lp,
-                                    np.asarray(stream_labels),
-                                    ControllerConfig(hold_frames=3),
-                                    chunk_size=32, backend="jnp")
-    print(f"stream: duty cycle {stats.duty_cycle:.3f}, "
-          f"missed positives {stats.missed_positive:.3f}, "
-          f"false active {stats.false_active:.3f}")
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sensors", type=int, default=1,
+                    help="number of concurrent sensor streams (>1 uses "
+                         "the fleet runtime)")
+    ap.add_argument("--frames", type=int, default=150,
+                    help="stream length per sensor")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    args = ap.parse_args()
 
-    # --- energy accounting (paper Fig. 17 / Table III) -------------------
-    params = energy.calibrate()
-    conv = energy.conventional(params)
-    p_obj = float(np.mean(stream_labels))
-    ours = energy.hypersense(stats.false_active,
-                             1.0 - stats.missed_positive, p_obj, params)
-    s = energy.savings(ours, conv)
-    print(f"p(object)={p_obj:.3f}: total energy saving "
-          f"{s['total_saving']:.1%}, edge saving {s['edge_saving']:.1%}, "
-          f"quality loss {stats.missed_positive:.2%}")
-    print(f"(paper @FPR0.1: total 89.8%, edge 60.6%, QL 4.93%)")
+    cfg = synthetic.RadarConfig(height=64, width=64)
+    frag, dim, stride = 16, 2048, 8
+    hs = train_gate(jax.random.PRNGKey(0), cfg, frag, dim, stride)
+    control = ControllerConfig(hold_frames=3)
+
+    if args.sensors <= 1:
+        # --- single stream through the chunked runtime ------------------
+        stream, stream_labels = synthetic.make_stream(
+            jax.random.PRNGKey(3), args.frames, cfg, event_prob=0.03,
+            event_len=10)
+        stats = simulate_stream_batched(hs, stream,
+                                        np.asarray(stream_labels),
+                                        control, chunk_size=32,
+                                        backend=args.backend, adc_bits=4)
+        print(f"stream: duty cycle {stats.duty_cycle:.3f}, "
+              f"missed positives {stats.missed_positive:.3f}, "
+              f"false active {stats.false_active:.3f}")
+
+        params = energy.calibrate()
+        conv = energy.conventional(params)
+        p_obj = float(np.mean(stream_labels))
+        ours = energy.hypersense(stats.false_active,
+                                 1.0 - stats.missed_positive, p_obj,
+                                 params)
+        s = energy.savings(ours, conv)
+        print(f"p(object)={p_obj:.3f}: total energy saving "
+              f"{s['total_saving']:.1%}, edge saving "
+              f"{s['edge_saving']:.1%}, quality loss "
+              f"{stats.missed_positive:.2%}")
+        print("(paper @FPR0.1: total 89.8%, edge 60.6%, QL 4.93%)")
+        return
+
+    # --- sensor fleet: S streams, one batched runtime -------------------
+    streams, labels = [], []
+    for s in range(args.sensors):
+        fr, lb = synthetic.make_stream(
+            jax.random.fold_in(jax.random.PRNGKey(3), s), args.frames,
+            cfg, event_prob=0.03, event_len=10)
+        streams.append(fr)
+        labels.append(np.asarray(lb))
+    fleet_frames = jnp.stack(streams)
+    fleet_labels = np.stack(labels)
+
+    report = simulate_fleet(hs, fleet_frames, fleet_labels, control,
+                            chunk_size=32, backend=args.backend,
+                            adc_bits=4,
+                            energy_params=energy.calibrate())
+    for s, st in enumerate(report.stats):
+        print(f"sensor {s}: duty {st.duty_cycle:.3f}, "
+              f"missed {st.missed_positive:.3f}, "
+              f"false-active {st.false_active:.3f}")
+    print(f"fleet of {report.n_sensors} x {report.n_frames} frames: "
+          f"mean duty cycle {report.duty_cycle:.3f}")
+    print(f"fleet energy: {report.energy_total_j:.1f} J vs always-on "
+          f"{report.baseline_total_j:.1f} J "
+          f"-> total saving {report.total_saving:.1%}")
 
 
 if __name__ == "__main__":

@@ -88,16 +88,27 @@ def duty_cycle(fpr: float, tpr: float, p_object: float) -> float:
     return (1.0 - p_object) * fpr + p_object * tpr
 
 
-def hypersense(fpr: float, tpr: float, p_object: float = 0.01,
-               params: EnergyParams = EnergyParams()) -> EnergyBreakdown:
-    d = duty_cycle(fpr, tpr, p_object)
+def hypersense_measured(duty: float,
+                        params: EnergyParams = EnergyParams()
+                        ) -> EnergyBreakdown:
+    """Per-frame energy at a *measured* duty cycle (e.g. from StreamStats).
+
+    The analytic :func:`hypersense` predicts the duty cycle from an ROC
+    operating point; this variant takes the duty cycle a stream driver
+    actually observed — the form the fleet runtime aggregates over sensors.
+    """
     return EnergyBreakdown(
         sensor=params.rf_frontend_j,
-        adc=params.adc_lp_j + d * params.adc_hp_j,
+        adc=params.adc_lp_j + duty * params.adc_hp_j,
         hdc=params.hdc_accel_j,
-        comm=d * params.comm_j,
-        cloud=d * params.cloud_j,
+        comm=duty * params.comm_j,
+        cloud=duty * params.cloud_j,
     )
+
+
+def hypersense(fpr: float, tpr: float, p_object: float = 0.01,
+               params: EnergyParams = EnergyParams()) -> EnergyBreakdown:
+    return hypersense_measured(duty_cycle(fpr, tpr, p_object), params)
 
 
 def savings(ours: EnergyBreakdown, base: EnergyBreakdown) -> dict:

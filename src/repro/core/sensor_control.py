@@ -78,6 +78,23 @@ def stats_from(decisions: np.ndarray, gated: np.ndarray,
     )
 
 
+def stats_from_batch(decisions: np.ndarray, gated: np.ndarray,
+                     labels: np.ndarray) -> list[StreamStats]:
+    """Per-stream accounting for a sensor fleet.
+
+    ``decisions``/``gated``/``labels`` are ``(S, N)`` stacks — one row per
+    sensor stream; row ``s`` gets exactly the :class:`StreamStats` an
+    independent single-stream driver would have produced.
+    """
+    decisions = np.asarray(decisions)
+    gated = np.asarray(gated)
+    labels = np.asarray(labels)
+    assert decisions.shape == gated.shape == labels.shape, (
+        decisions.shape, gated.shape, labels.shape)
+    return [stats_from(decisions[s], gated[s], labels[s])
+            for s in range(decisions.shape[0])]
+
+
 def simulate_stream(decide: Callable[[np.ndarray], bool],
                     frames: np.ndarray, labels: np.ndarray,
                     config: ControllerConfig | None = None) -> StreamStats:

@@ -50,6 +50,9 @@ DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
     "norm": None,
     # --- activation dims ---
     "act_batch": ("pod", "data"),
+    # Sensor-fleet axis (repro.sensing.fleet): independent streams, so it
+    # shards like a batch — data-parallel over pods/hosts, never "model".
+    "sensors": ("pod", "data"),
     "act_seq": None,
     # Megatron-style sequence parallelism for the residual stream: layer
     # boundaries (= the per-layer remat checkpoints under scan) are sharded

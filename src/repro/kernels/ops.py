@@ -85,3 +85,25 @@ def fragment_score_map_batch(frames: Array, class_hvs: Array, B0: Array,
     return _ss.fragment_scores_batch(frames, tiles, h=h, w=w, stride=stride,
                                      nonlinearity=nonlinearity,
                                      interpret=_interpret())
+
+
+def fragment_score_map_fleet(frames: Array, class_hvs: Array, B0: Array,
+                             b: Array, *, h: int, w: int, stride: int,
+                             nonlinearity: NonLin = "rff",
+                             tiles: _ss.ScoreTiles | None = None,
+                             block_d: int = 512) -> Array:
+    """(S, C, H, W) super-chunk -> (S, C, my, mx) score maps, ONE launch.
+
+    The fleet hot path: S concurrent sensor streams contribute C frames
+    each; the ``S*C`` axis is flattened into the batch grid of
+    :func:`fragment_score_map_batch`, so the whole fleet super-chunk is a
+    single ``pallas_call`` against one shared :class:`ScoreTiles`
+    precompute. The grid's batch axis is parallel, so per-frame numerics
+    are identical to S independent per-stream calls.
+    """
+    S, C, H, W = frames.shape
+    maps = fragment_score_map_batch(
+        frames.reshape(S * C, H, W), class_hvs, B0, b, h=h, w=w,
+        stride=stride, nonlinearity=nonlinearity, tiles=tiles,
+        block_d=block_d)
+    return maps.reshape(S, C, *maps.shape[1:])

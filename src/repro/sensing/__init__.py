@@ -1,6 +1,7 @@
 """Sensing substrate: synthetic radar data, ADC simulation, fragment
-sampling, baseline detectors (CRUW stand-in; DESIGN.md §1), and the
-batched streaming runtime (:mod:`repro.sensing.stream`)."""
+sampling, baseline detectors (CRUW stand-in; DESIGN.md §1), the batched
+streaming runtime (:mod:`repro.sensing.stream`), and the multi-sensor
+fleet runtime (:mod:`repro.sensing.fleet`)."""
 
-from repro.sensing import (adc, baselines, fragments, stream,  # noqa: F401
-                           synthetic)
+from repro.sensing import (adc, baselines, fleet, fragments,  # noqa: F401
+                           stream, synthetic)

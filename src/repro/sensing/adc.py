@@ -18,10 +18,18 @@ Array = jax.Array
 
 @partial(jax.jit, static_argnames=("bits",))
 def quantize(frame: Array, bits: int, v_max: float = 1.5) -> Array:
-    """Uniform mid-rise quantization to ``bits`` bits over [0, v_max]."""
+    """Uniform mid-rise quantization to ``bits`` bits over [0, v_max].
+
+    Defined as ``quantize_codes(frame) * (v_max / levels)`` — the
+    reconstruction is the integer code times the LSB step *by
+    construction*, so the float path can never drift from what the
+    integer near-sensor datapath computes (asserted exactly in
+    ``tests/test_sensing.py``). Idempotent: requantizing an already
+    quantized frame is the identity, which is what makes pre-quantized
+    and internally-quantized streams produce identical stats.
+    """
     levels = (1 << bits) - 1
-    q = jnp.round(jnp.clip(frame, 0.0, v_max) / v_max * levels)
-    return q * (v_max / levels)
+    return quantize_codes(frame, bits, v_max) * jnp.float32(v_max / levels)
 
 
 @partial(jax.jit, static_argnames=("bits",))

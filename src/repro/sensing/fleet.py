@@ -1,0 +1,265 @@
+"""Multi-sensor fleet streaming runtime (paper §I: escalating sensor counts).
+
+HyperSense's always-on HDC front-end is fleet-scale in deployment — one
+edge site aggregates many radar/camera feeds (cf. Eggimann et al.'s
+always-on SCM accelerator, HyperCam's camera fleets). This module
+multiplies the single-stream chunked runtime (:mod:`repro.sensing.stream`)
+along a sensor axis without multiplying kernel launches:
+
+* ``(S, C, H, W)`` **super-chunks** — S concurrent streams, C frames each —
+  are flattened to an ``S*C`` batch and scored by ONE ``pallas_call``
+  (grid ``(S*C, my, n_dt)``) against one shared
+  :class:`~repro.kernels.sliding_scores.ScoreTiles` precompute
+  (:func:`repro.kernels.ops.fragment_score_map_fleet`);
+* per-stream controller hysteresis is ``vmap(gate_scan)`` — S independent
+  ``lax.scan`` hold states carried across super-chunks, so every stream
+  sees exactly the gating an independent :class:`StreamRunner` would give;
+* the optional low-precision **ADC** sits in front of the gate
+  (``adc_bits=4`` reproduces the paper's Fig. 3 loop: the gate scores the
+  cheap capture, the caller keeps the raw frames for gated-on delivery);
+* the sensor axis is **sharded across devices** with ``shard_map`` via the
+  logical-axis rules in :mod:`repro.distributed.sharding` ("sensors" maps
+  to the data-parallel mesh axes). Streams are independent, so the sharded
+  step needs no communication; without a mesh (or when S doesn't divide)
+  the exact same code runs unsharded — CPU tests are unchanged.
+
+:func:`fleet_report` turns the per-stream gate decisions into per-stream
+:class:`~repro.core.sensor_control.StreamStats` plus a fleet-aggregate
+energy account built on :mod:`repro.core.energy`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import energy
+from repro.core.hypersense import HyperSenseModel
+from repro.core.sensor_control import (ControllerConfig, StreamStats,
+                                       stats_from_batch)
+from repro.distributed import sharding as shlib
+from repro.sensing.stream import (adc_view, model_tiles, super_chunk_fn,
+                                  super_chunk_step)
+
+Array = jax.Array
+
+
+def _sensor_axes(S: int, mesh) -> tuple[str, ...] | None:
+    """Mesh axes the "sensors" logical dim resolves to (None = unsharded)."""
+    if mesh is None:
+        return None
+    part = shlib.spec_for((S,), ("sensors",), mesh)
+    if not part or part[0] is None:
+        return None
+    ax = part[0]
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
+def _build_step(mesh, axes, **static):
+    """Fleet step callable: the shared module-level jit, or shard_map'd.
+
+    Unsharded, this is just :func:`repro.sensing.stream.super_chunk_step`
+    with the static config bound — every runner shares its global trace
+    cache. Under a mesh, the raw step body is ``shard_map``'d over the
+    sensor axis and jitted per (mesh, axes); streams are independent, so
+    the sharded body is the unsharded body on a local slice of sensors —
+    ``check_rep=False`` because there is no replicated output to verify,
+    and no collective is ever emitted.
+    """
+    if axes is None:
+        return functools.partial(super_chunk_step, **static)
+    from jax.experimental.shard_map import shard_map
+    s4, s2, s1 = P(axes, None, None, None), P(axes, None), P(axes)
+    rep = P()
+    return jax.jit(shard_map(
+        functools.partial(super_chunk_fn, **static), mesh=mesh,
+        in_specs=(s4, rep, rep, rep, rep, rep, s1, rep),
+        out_specs=(s2, s2, s2, s1),
+        check_rep=False))
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    """Per-stream stats + fleet-aggregate energy accounting."""
+    stats: list[StreamStats]              # one per sensor stream
+    n_frames: int                         # frames per stream
+    duty_cycle: float                     # fleet-mean fraction gated on
+    energy_per_frame: energy.EnergyBreakdown  # fleet-mean, HyperSense path
+    energy_total_j: float                 # fleet total over all frames
+    baseline_total_j: float               # always-on conventional fleet
+
+    @property
+    def n_sensors(self) -> int:
+        return len(self.stats)
+
+    @property
+    def total_saving(self) -> float:
+        return 1.0 - self.energy_total_j / self.baseline_total_j
+
+
+def fleet_report(fired, gated, labels,
+                 params: energy.EnergyParams | None = None) -> FleetReport:
+    """(S, N) gate decisions -> per-stream stats + fleet energy account.
+
+    Each stream is billed at its own *measured* duty cycle
+    (:func:`repro.core.energy.hypersense_measured`); the baseline is the
+    conventional always-on pipeline on every stream.
+    """
+    params = params or energy.EnergyParams()
+    stats = stats_from_batch(fired, gated, labels)
+    n = int(np.asarray(fired).shape[1])
+    per_stream = [energy.hypersense_measured(s.duty_cycle, params)
+                  for s in stats]
+    total = sum(b.total for b in per_stream) * n
+    base = energy.conventional(params).total * len(stats) * n
+    duty = float(np.mean([s.duty_cycle for s in stats]))
+    mean = energy.hypersense_measured(duty, params)
+    return FleetReport(stats=stats, n_frames=n, duty_cycle=duty,
+                       energy_per_frame=mean, energy_total_j=float(total),
+                       baseline_total_j=float(base))
+
+
+class FleetRunner:
+    """Stateful fleet scorer+gate: ``process((S, n, H, W))`` incrementally.
+
+    Semantically S independent :class:`~repro.sensing.stream.StreamRunner`
+    instances — per-stream scores/fired/gated are asserted identical in
+    ``tests/test_fleet.py`` — executed as one batched pipeline: each
+    ``(S, chunk_size)`` super-chunk is a single jitted step (one kernel
+    launch on the ``pallas`` backend) and the ``(S,)`` hold vector carries
+    across ``process`` calls.
+
+    ``adc_bits`` puts the simulated low-precision ADC in front of the
+    gate; noise (``adc_sigma > 0``) is keyed per (stream, absolute frame
+    index), so stream slicing stays invisible. Under an active
+    :func:`repro.distributed.sharding.use_mesh` (or an explicit ``mesh=``)
+    the sensor axis is ``shard_map``'d across the mesh axes the "sensors"
+    rule resolves to.
+    """
+
+    def __init__(self, model: HyperSenseModel,
+                 config: ControllerConfig | None = None, *,
+                 chunk_size: int = 32, backend: str = "jnp",
+                 t_detection: int | None = None, block_d: int = 512,
+                 adc_bits: int | None = None, adc_sigma: float = 0.0,
+                 adc_key: Array | int = 0, mesh=None):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if adc_sigma > 0.0 and adc_bits is None:
+            raise ValueError("adc_sigma > 0 without adc_bits: the ADC is "
+                             "only in the loop when adc_bits is set")
+        self.model = model
+        self.config = config or ControllerConfig()
+        self.chunk_size = chunk_size
+        self.backend = backend
+        self.block_d = block_d
+        self.t_detection = (model.t_detection if t_detection is None
+                            else t_detection)
+        self.adc_bits = adc_bits
+        self.adc_sigma = adc_sigma
+        self._adc_key = (jax.random.PRNGKey(adc_key)
+                         if isinstance(adc_key, int) else adc_key)
+        self._mesh = mesh
+        self._tiles = None      # (W, ScoreTiles) — keyed on frame width
+        self._holds = None      # (S,) i32, allocated on first process()
+        self._n_seen = 0
+        self._step = None
+        self._step_key = None
+
+    def reset(self) -> None:
+        self._holds = None
+        self._n_seen = 0
+
+    @property
+    def holds(self) -> Array | None:
+        """(S,) controller hold state after the last processed frame."""
+        return self._holds
+
+    def _ensure_tiles(self, W: int):
+        if self.backend != "pallas":
+            return None
+        if self._tiles is None or self._tiles[0] != W:
+            self._tiles = (W, model_tiles(self.model, W, self.block_d))
+        return self._tiles[1]
+
+    def _ensure_step(self, S: int):
+        mesh = self._mesh if self._mesh is not None else shlib.current_mesh()
+        axes = _sensor_axes(S, mesh)
+        key = (id(mesh) if axes else None, axes)
+        if self._step is None or self._step_key != key:
+            m = self.model
+            self._step = _build_step(
+                mesh, axes, h=m.h, w=m.w, stride=m.stride,
+                nonlinearity=m.nonlinearity, t_detection=self.t_detection,
+                hold_frames=self.config.hold_frames, backend=self.backend)
+            self._step_key = key
+        return self._step
+
+    def process(self, frames) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(S, n, H, W) super-stream -> ((S, n) scores, fired, gated)."""
+        frames = jnp.asarray(frames)
+        if frames.ndim != 4:
+            raise ValueError(f"expected (S, n, H, W) frames, "
+                             f"got shape {frames.shape}")
+        S, n = frames.shape[:2]
+        if self._holds is None:
+            self._holds = jnp.zeros((S,), jnp.int32)
+        elif self._holds.shape[0] != S:
+            raise ValueError(f"fleet size changed: carried state has "
+                             f"{self._holds.shape[0]} streams, got {S}")
+        if self.adc_bits is not None:
+            keys = jax.vmap(
+                lambda s: jax.random.fold_in(self._adc_key, s))(
+                    jnp.arange(S))
+            frames = jax.vmap(lambda k, f: adc_view(
+                f, self.adc_bits, sigma=self.adc_sigma, key=k,
+                start_index=self._n_seen))(keys, frames)
+        self._n_seen += n
+
+        m = self.model
+        tiles = self._ensure_tiles(frames.shape[-1])
+        step = self._ensure_step(S)
+        scores = np.empty((S, n), np.float32)
+        fired = np.empty((S, n), bool)
+        gated = np.empty((S, n), bool)
+        for start in range(0, n, self.chunk_size):
+            chunk = frames[:, start:start + self.chunk_size]
+            n_valid = chunk.shape[1]
+            if n_valid < self.chunk_size:
+                pad = self.chunk_size - n_valid
+                chunk = jnp.pad(chunk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            s, f, g, self._holds = step(
+                chunk, m.class_hvs, m.B0, m.b, tiles,
+                jnp.float32(m.t_score), self._holds, jnp.int32(n_valid))
+            sl = slice(start, start + n_valid)
+            scores[:, sl] = np.asarray(s)[:, :n_valid]
+            fired[:, sl] = np.asarray(f)[:, :n_valid]
+            gated[:, sl] = np.asarray(g)[:, :n_valid]
+        return scores, fired, gated
+
+
+def simulate_fleet(model: HyperSenseModel, frames, labels,
+                   config: ControllerConfig | None = None, *,
+                   chunk_size: int = 32, backend: str = "jnp",
+                   t_detection: int | None = None, block_d: int = 512,
+                   adc_bits: int | None = None, adc_sigma: float = 0.0,
+                   adc_key: Array | int = 0, mesh=None,
+                   energy_params: energy.EnergyParams | None = None
+                   ) -> FleetReport:
+    """Run a whole ``(S, N, H, W)`` fleet recording end-to-end.
+
+    One :class:`FleetRunner` pass followed by :func:`fleet_report`:
+    per-stream :class:`StreamStats` (identical to S independent
+    single-stream simulations) plus the fleet energy account.
+    """
+    runner = FleetRunner(model, config, chunk_size=chunk_size,
+                         backend=backend, t_detection=t_detection,
+                         block_d=block_d, adc_bits=adc_bits,
+                         adc_sigma=adc_sigma, adc_key=adc_key, mesh=mesh)
+    _, fired, gated = runner.process(frames)
+    return fleet_report(fired, gated, labels, energy_params)

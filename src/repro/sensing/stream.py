@@ -23,8 +23,6 @@ the frame-at-a-time ``simulate_stream``.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,8 +31,30 @@ from repro.core import hypersense
 from repro.core.hypersense import HyperSenseModel, frame_detection_score
 from repro.core.sensor_control import (ControllerConfig, StreamStats,
                                        stats_from)
+from repro.sensing import adc as adc_sim
 
 Array = jax.Array
+
+
+def adc_view(frames: Array, bits: int, *, sigma: float = 0.0,
+             key: Array | None = None, start_index: int = 0) -> Array:
+    """Low-precision ADC capture of ``(N, H, W)`` frames (paper Fig. 3).
+
+    Thermal noise (``sigma > 0``) is keyed by *absolute frame index*
+    (``start_index + i``), not by call count — re-slicing a stream into
+    different ``process()`` calls yields bit-identical captures, which is
+    what keeps the runners' slicing-invariance property intact with the
+    ADC in the loop.
+    """
+    frames = jnp.asarray(frames)
+    if sigma > 0.0:
+        if key is None:
+            raise ValueError("adc noise (sigma > 0) requires a PRNG key")
+        idx = jnp.arange(frames.shape[0]) + start_index
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+        frames = jax.vmap(
+            lambda k, f: adc_sim.adc_noise(k, f, sigma))(keys, frames)
+    return adc_sim.quantize(frames, bits)
 
 
 def gate_scan(decisions: Array, hold_frames: int,
@@ -54,46 +74,67 @@ def gate_scan(decisions: Array, hold_frames: int,
     return gated, holds
 
 
-@functools.partial(jax.jit, static_argnames=("h", "w", "stride",
-                                             "nonlinearity", "t_detection",
-                                             "hold_frames", "backend"))
-def _chunk_step(frames, class_hvs, B0, b, tiles, t_score, hold, n_valid, *,
-                h, w, stride, nonlinearity, t_detection, hold_frames,
-                backend):
-    """One jitted streaming step over a fixed-size chunk.
+def super_chunk_fn(frames, class_hvs, B0, b, tiles, t_score, holds,
+                   n_valid, *, h, w, stride, nonlinearity, t_detection,
+                   hold_frames, backend):
+    """One streaming step over an ``(S, C, H, W)`` super-chunk.
+
+    The shared core of both runners: ``StreamRunner`` calls it with
+    ``S = 1``, :class:`~repro.sensing.fleet.FleetRunner` with S concurrent
+    streams. The ``S*C`` axis is flattened into the batched scorer (one
+    kernel launch on the ``pallas`` backend) and each stream's gate is a
+    ``vmap``'d :func:`gate_scan` — the batch axis is parallel everywhere,
+    so a fleet step is exactly S independent stream steps.
 
     ``n_valid`` masks a padded tail chunk; pad frames never fire, and the
-    carried hold state is read at the last *valid* frame.
+    carried ``(S,)`` hold state is read at the last *valid* frame.
     """
-    N, H, W = frames.shape
+    S, C, H, W = frames.shape
     my = (H - h) // stride + 1
     mx = (W - w) // stride + 1
 
     if backend == "pallas":
         from repro.kernels import ops as kops
-        maps = kops.fragment_score_map_batch(
+        maps = kops.fragment_score_map_fleet(
             frames, class_hvs, B0, b, h=h, w=w, stride=stride,
-            nonlinearity=nonlinearity, tiles=tiles)          # (N, my, mx)
+            nonlinearity=nonlinearity, tiles=tiles)          # (S, C, my, mx)
     else:
         maps = jax.vmap(lambda f: hypersense.fragment_score_map(
             f, class_hvs, B0, b, h=h, w=w, stride=stride,
-            nonlinearity=nonlinearity, backend=backend))(frames)
+            nonlinearity=nonlinearity, backend=backend))(
+                frames.reshape(S * C, H, W)).reshape(S, C, my, mx)
 
-    scores = jax.vmap(
-        lambda m: frame_detection_score(m, t_detection))(maps)  # (N,)
+    scores = jax.vmap(jax.vmap(
+        lambda m: frame_detection_score(m, t_detection)))(maps)  # (S, C)
 
     # count(s_i > t) > T  <=>  (T+1)-th largest > t, provided T < my*mx;
     # with T >= my*mx the count can never exceed T -> never fires.
-    valid = jnp.arange(N) < n_valid
+    valid = jnp.arange(C) < n_valid
     if t_detection >= my * mx:
-        fired = jnp.zeros((N,), bool)
+        fired = jnp.zeros((S, C), bool)
     else:
-        fired = (scores > t_score) & valid
+        fired = (scores > t_score) & valid[None, :]
 
-    gated, holds = gate_scan(fired, hold_frames, hold)
+    gated, holds_seq = jax.vmap(
+        lambda f, h0: gate_scan(f, hold_frames, h0))(fired, holds)
     hold_out = jnp.where(n_valid > 0,
-                         holds[jnp.maximum(n_valid - 1, 0)], hold)
+                         holds_seq[:, jnp.maximum(n_valid - 1, 0)], holds)
     return scores, fired, gated, hold_out
+
+
+#: module-level jit: every runner instance shares one trace cache.
+super_chunk_step = jax.jit(
+    super_chunk_fn, static_argnames=("h", "w", "stride", "nonlinearity",
+                                     "t_detection", "hold_frames",
+                                     "backend"))
+
+
+def model_tiles(model: HyperSenseModel, W: int, block_d: int):
+    """ScoreTiles precompute for ``model`` on width-``W`` frames."""
+    from repro.kernels import ops as kops
+    return kops.precompute_tiles(model.B0, model.b, model.class_hvs, W=W,
+                                 w=model.w, stride=model.stride,
+                                 block_d=block_d)
 
 
 class StreamRunner:
@@ -108,9 +149,14 @@ class StreamRunner:
     def __init__(self, model: HyperSenseModel,
                  config: ControllerConfig | None = None, *,
                  chunk_size: int = 32, backend: str = "jnp",
-                 t_detection: int | None = None, block_d: int = 512):
+                 t_detection: int | None = None, block_d: int = 512,
+                 adc_bits: int | None = None, adc_sigma: float = 0.0,
+                 adc_key: Array | int = 0):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if adc_sigma > 0.0 and adc_bits is None:
+            raise ValueError("adc_sigma > 0 without adc_bits: the ADC is "
+                             "only in the loop when adc_bits is set")
         self.model = model
         self.config = config or ControllerConfig()
         self.chunk_size = chunk_size
@@ -118,27 +164,39 @@ class StreamRunner:
         self.block_d = block_d
         self.t_detection = (model.t_detection if t_detection is None
                             else t_detection)
+        self.adc_bits = adc_bits
+        self.adc_sigma = adc_sigma
+        self._adc_key = (jax.random.PRNGKey(adc_key)
+                         if isinstance(adc_key, int) else adc_key)
         self._tiles = None      # (W, ScoreTiles) — keyed on frame width
         self._hold = jnp.zeros((), jnp.int32)
+        self._n_seen = 0        # absolute frame index (keys the ADC noise)
 
     def reset(self) -> None:
         self._hold = jnp.zeros((), jnp.int32)
+        self._n_seen = 0
 
     def _ensure_tiles(self, W: int):
         if self.backend != "pallas":
             return None
         if self._tiles is None or self._tiles[0] != W:
-            from repro.kernels import ops as kops
-            self._tiles = (W, kops.precompute_tiles(
-                self.model.B0, self.model.b, self.model.class_hvs, W=W,
-                w=self.model.w, stride=self.model.stride,
-                block_d=self.block_d))
+            self._tiles = (W, model_tiles(self.model, W, self.block_d))
         return self._tiles[1]
 
     def process(self, frames) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(n, H, W) frames -> (scores (n,), fired (n,), gated (n,))."""
+        """(n, H, W) frames -> (scores (n,), fired (n,), gated (n,)).
+
+        With ``adc_bits`` set, the scorer sees the low-precision ADC
+        capture of each frame (:func:`adc_view`) — the paper's always-on
+        path — while the caller keeps the raw high-precision frames for
+        whatever the gate lets through.
+        """
         frames = jnp.asarray(frames)
+        if self.adc_bits is not None:
+            frames = adc_view(frames, self.adc_bits, sigma=self.adc_sigma,
+                              key=self._adc_key, start_index=self._n_seen)
         n = frames.shape[0]
+        self._n_seen += n
         m = self.model
         tiles = self._ensure_tiles(frames.shape[-1])
         scores = np.empty(n, np.float32)
@@ -150,16 +208,17 @@ class StreamRunner:
             if n_valid < self.chunk_size:
                 pad = self.chunk_size - n_valid
                 chunk = jnp.pad(chunk, ((0, pad), (0, 0), (0, 0)))
-            s, f, g, self._hold = _chunk_step(
-                chunk, m.class_hvs, m.B0, m.b, tiles,
-                jnp.float32(m.t_score), self._hold, jnp.int32(n_valid),
-                h=m.h, w=m.w, stride=m.stride,
+            s, f, g, hold_out = super_chunk_step(
+                chunk[None], m.class_hvs, m.B0, m.b, tiles,
+                jnp.float32(m.t_score), self._hold[None],
+                jnp.int32(n_valid), h=m.h, w=m.w, stride=m.stride,
                 nonlinearity=m.nonlinearity, t_detection=self.t_detection,
                 hold_frames=self.config.hold_frames, backend=self.backend)
+            self._hold = hold_out[0]
             sl = slice(start, start + n_valid)
-            scores[sl] = np.asarray(s)[:n_valid]
-            fired[sl] = np.asarray(f)[:n_valid]
-            gated[sl] = np.asarray(g)[:n_valid]
+            scores[sl] = np.asarray(s)[0, :n_valid]
+            fired[sl] = np.asarray(f)[0, :n_valid]
+            gated[sl] = np.asarray(g)[0, :n_valid]
         return scores, fired, gated
 
 
@@ -167,17 +226,22 @@ def simulate_stream_batched(model: HyperSenseModel, frames, labels,
                             config: ControllerConfig | None = None, *,
                             chunk_size: int = 32, backend: str = "jnp",
                             t_detection: int | None = None,
-                            block_d: int = 512) -> StreamStats:
+                            block_d: int = 512,
+                            adc_bits: int | None = None,
+                            adc_sigma: float = 0.0,
+                            adc_key: Array | int = 0) -> StreamStats:
     """Chunked-batched twin of ``sensor_control.simulate_stream``.
 
     Produces identical :class:`StreamStats` to replaying
     ``hypersense.detect`` frame-at-a-time through ``SensorController``,
     but runs ``len(frames)/chunk_size`` jitted steps instead of
     ``len(frames)`` dispatches (one kernel launch per chunk on the
-    ``pallas`` backend).
+    ``pallas`` backend). ``adc_bits`` puts the simulated low-precision
+    ADC in front of the gate (pass raw frames).
     """
     runner = StreamRunner(model, config, chunk_size=chunk_size,
                           backend=backend, t_detection=t_detection,
-                          block_d=block_d)
+                          block_d=block_d, adc_bits=adc_bits,
+                          adc_sigma=adc_sigma, adc_key=adc_key)
     _, fired, gated = runner.process(frames)
     return stats_from(fired, gated, labels)

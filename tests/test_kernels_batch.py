@@ -88,6 +88,48 @@ def test_batch_nonlinearities(nonlin):
                                    rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("H,W,h,w,stride", [
+    (17, 23, 4, 5, 3),    # non-square; stride divides neither H-h nor W-w
+    (19, 13, 6, 3, 4),    # W < H, W-w not divisible, single-column tail
+    (15, 31, 5, 5, 7),    # wide frame, large stride -> tiny score map
+])
+def test_batch_odd_shapes_match_jnp(H, W, h, w, stride):
+    """Non-square frames and strides that don't divide ``H - h``/``W - w``:
+    the floor'd (my, mx) grid must agree with the jnp oracle everywhere."""
+    N, D = 3, 64
+    my = (H - h) // stride + 1
+    mx = (W - w) // stride + 1
+    assert (H - h) % stride != 0 or (W - w) % stride != 0
+    frames = jax.random.uniform(key(20), (N, H, W))
+    B0, b = encoding.make_perm_base_rows(key(21), h, D)
+    C = jax.random.normal(key(22), (2, D))
+    tiles = k_ss.precompute_tiles(B0, b, C, W=W, w=w, stride=stride,
+                                  block_d=32)
+    got = k_ss.fragment_scores_batch(frames, tiles, h=h, w=w, stride=stride,
+                                     interpret=True)
+    assert got.shape == (N, my, mx)
+    for i in range(N):
+        want = hypersense.fragment_score_map(frames[i], C, B0, b, h=h, w=w,
+                                             stride=stride, backend="jnp")
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_fleet_reshape_plumbing_matches_batch():
+    """(S, C, H, W) fleet entry point == reshaped batch entry point."""
+    S, C, H, W, D, h, w, stride = 3, 4, 14, 18, 64, 3, 4, 2
+    frames = jax.random.uniform(key(23), (S, C, H, W))
+    B0, b = encoding.make_perm_base_rows(key(24), h, D)
+    Chv = jax.random.normal(key(25), (2, D))
+    got = ops.fragment_score_map_fleet(frames, Chv, B0, b, h=h, w=w,
+                                       stride=stride)
+    want = ops.fragment_score_map_batch(frames.reshape(S * C, H, W), Chv,
+                                        B0, b, h=h, w=w, stride=stride)
+    assert got.shape == (S, C) + want.shape[1:]
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want).reshape(got.shape))
+
+
 def test_batch_of_one_equals_single():
     H, W, D, h, w, stride = 14, 14, 64, 3, 3, 1
     frame = jax.random.uniform(key(9), (H, W))

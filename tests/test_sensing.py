@@ -46,6 +46,28 @@ def test_adc_quantization_levels(bits):
     assert float(jnp.abs(q - x).max()) <= 1.5 / (2 ** bits - 1) / 2 + 1e-6
 
 
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 12))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_adc_quantize_exactly_codes_times_lsb(seed, bits):
+    """quantize(x, b) == quantize_codes(x, b) * (v_max / levels), exactly.
+
+    The float reconstruction and the integer near-sensor datapath must be
+    the same quantizer bit-for-bit (quantize is *defined* via the codes).
+    Inputs include out-of-range values that exercise the clip.
+    """
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (33, 17),
+                           minval=-0.5, maxval=2.0)
+    levels = (1 << bits) - 1
+    q = adc.quantize(x, bits)
+    codes = adc.quantize_codes(x, bits)
+    np.testing.assert_array_equal(
+        np.asarray(q),
+        np.asarray(codes, np.float32) * np.float32(1.5 / levels))
+    # idempotence: requantizing a reconstruction is the identity
+    np.testing.assert_array_equal(np.asarray(adc.quantize(q, bits)),
+                                  np.asarray(q))
+
+
 def test_adc_codes_integer_range():
     x = jax.random.uniform(jax.random.PRNGKey(2), (16, 16), maxval=1.5)
     codes = adc.quantize_codes(x, 4)
