@@ -1,4 +1,4 @@
-.PHONY: test test-multidevice deps bench-stream bench-fleet bench
+.PHONY: test test-multidevice deps bench-stream bench-fleet bench-adapt bench
 
 deps:
 	pip install -r requirements-dev.txt
@@ -18,6 +18,9 @@ bench-stream:
 
 bench-fleet:
 	PYTHONPATH=src python benchmarks/fleet_throughput.py
+
+bench-adapt:
+	PYTHONPATH=src python benchmarks/adaptation.py
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

@@ -63,20 +63,16 @@ def retrain_epoch(class_hvs: Array, hvs: Array, labels: Array,
       ``C_l  += lr * (1 - delta) * phi(x)``   (true class)
       ``C_l' -= lr * (1 - delta) * phi(x)``   (predicted wrong class)
 
-    Sequential over samples (the paper's online rule) via ``lax.scan``.
+    Sequential over samples (the paper's online rule): a ``lax.scan`` of
+    :func:`repro.core.online.online_update` — the same rule the streaming
+    runtime applies chunk-by-chunk (``repro.core.online.chunk_update``),
+    so offline retraining and online adaptation share one definition.
     """
+    from repro.core import online
 
     def step(chvs: Array, xy):
         hv, y = xy
-        scores = hdc.class_scores(hv[None, :], chvs)[0]            # (C,)
-        pred = jnp.argmax(scores)
-        delta = scores[y]
-        rate = lr * (1.0 - delta)
-        wrong = pred != y
-        upd = jnp.zeros_like(chvs).at[y].set(rate * hv)
-        upd = upd.at[pred].add(jnp.where(wrong, -rate, 0.0) * hv)
-        chvs = chvs + jnp.where(wrong, 1.0, 0.0) * upd
-        return chvs, wrong
+        return online.online_update(chvs, hv, y, lr)
 
     class_hvs, miss = jax.lax.scan(step, class_hvs, (hvs, labels))
     return class_hvs

@@ -98,17 +98,42 @@ def detect(model: HyperSenseModel, frame: Array, *,
 
 def frame_detection_score(scores: Array, t_detection: int) -> Array:
     """ROC-sweepable frame score: the (t_detection+1)-th largest fragment
-    score. ``frame positive at threshold t  <=>  score > t``."""
+    score. ``frame positive at threshold t  <=>  score > t``.
+
+    The hot path only needs the (T+1)-th order statistic, so this is
+    ``lax.top_k(flat, T+1)`` — O(M log(T+1))-ish — instead of a full
+    O(M log M) sort. ``t_detection`` is static in every caller (it sizes
+    ``top_k``); a traced value falls back to the sort.
+    """
     flat = scores.reshape(-1)
-    k = jnp.minimum(t_detection, flat.shape[0] - 1)
-    sorted_desc = jnp.sort(flat)[::-1]
-    return sorted_desc[k]
+    try:
+        k = min(int(t_detection), flat.shape[0] - 1)
+    except (TypeError, jax.errors.TracerIntegerConversionError):
+        k = jnp.minimum(t_detection, flat.shape[0] - 1)
+        return jnp.sort(flat)[::-1][k]
+    return jax.lax.top_k(flat, k + 1)[0][k]
 
 
 def detect_batch(model: HyperSenseModel, frames: Array, *,
-                 backend: str = "jnp") -> Array:
-    """Vectorized detection over ``(N, H, W)`` frames -> ``(N,)`` bool."""
-    return jax.vmap(lambda f: detect(model, f, backend=backend))(frames)
+                 backend: str = "jnp", tiles=None) -> Array:
+    """Vectorized detection over ``(N, H, W)`` frames -> ``(N,)`` bool.
+
+    Routed through :func:`frame_scores_batch` — ONE kernel launch for the
+    whole batch on the ``pallas`` backend (vs one per frame when vmapping
+    :func:`detect`) — using the order-statistic equivalence
+    ``count(s_i > t) > T  <=>  kth_largest(s, T+1) > t``, valid while
+    ``T < my*mx``; past that the count can never exceed T, so nothing
+    fires.
+    """
+    from repro.core.encoding import num_windows
+
+    N, H, W = frames.shape
+    my = num_windows(H, model.h, model.stride)
+    mx = num_windows(W, model.w, model.stride)
+    if model.t_detection >= my * mx:
+        return jnp.zeros(N, bool)
+    scores = frame_scores_batch(model, frames, backend=backend, tiles=tiles)
+    return scores > model.t_score
 
 
 def frame_scores_batch(model: HyperSenseModel, frames: Array,

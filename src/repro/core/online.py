@@ -1,0 +1,175 @@
+"""Online learning for the HDC classifier (paper §I, §III-A).
+
+The paper's "memory-centricity and real-time learning" claim: class
+hypervectors are a lightweight associative memory, so the model can keep
+learning *in the stream*. This module factors the similarity-scaled
+perceptron rule out of ``fragment_model.retrain_epoch`` into pure,
+scan-able pieces the streaming runtime threads through its chunks:
+
+* :func:`online_update` — one sample, one update. Exactly the step body of
+  ``retrain_epoch``; the offline loop is now literally a scan of it.
+* :func:`chunk_update` — label-feedback mode: fold a chunk of (hv, label)
+  samples through :func:`online_update` sequentially. Because each step
+  scores with the *running* class hypervectors, folding a sample sequence
+  chunk-by-chunk is identical to one ``retrain_epoch`` pass over the whole
+  sequence — chunk size is invisible to the learning trajectory (tested in
+  ``tests/test_online.py``).
+* :func:`chunk_update_pseudo` — self-supervised mode for label-free
+  streams: each sample is pseudo-labeled with the model's own prediction
+  and *reinforced* only when the prediction is confident (top-2 score
+  margin >= ``confidence``). Low-confidence samples are skipped, which is
+  what keeps self-training from amplifying its own mistakes under drift.
+* :class:`AdaptConfig` — the static (hashable) adaptation policy the
+  runners carry: mode, learning rate, confidence gate, and — for fleets —
+  whether streams share one classifier or adapt per-stream.
+
+Everything is pure jnp over explicit ``class_hvs`` state: jit/vmap/scan
+safe, no hidden mutation — the runners own the state
+(``repro.sensing.stream.StreamState``) and thread it through chunks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hdc
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """Static adaptation policy for the streaming runners.
+
+    ``mode``:
+      * ``"label"``  — supervised label feedback: the caller passes
+        per-frame labels to ``process(frames, labels)`` (e.g. delayed
+        ground truth fed back from the gated high-precision path).
+      * ``"pseudo"`` — confidence-gated self-training: no labels; the
+        model reinforces its own confident predictions.
+
+    ``lr`` scales the similarity-scaled update rate. ``confidence`` is the
+    minimum top-2 score margin for a pseudo-label update (ignored in
+    ``"label"`` mode). ``scope`` is fleet-only: ``"shared"`` folds every
+    stream's samples into one classifier (time-ordered, stream-index
+    tie-break); ``"per-stream"`` gives each sensor its own classifier,
+    updated by a ``vmap`` over streams.
+
+    Frozen dataclass => hashable => usable as a jit static argument.
+    """
+    mode: Literal["label", "pseudo"] = "label"
+    lr: float = 0.5
+    confidence: float = 0.25
+    scope: Literal["shared", "per-stream"] = "shared"
+
+
+def online_update(class_hvs: Array, hv: Array, y: Array,
+                  lr: float = 1.0) -> tuple[Array, Array]:
+    """One similarity-scaled perceptron update (paper step 4), pure.
+
+    If the sample is mispredicted, move the true class toward it and the
+    wrongly predicted class away, scaled by how unfamiliar it looked:
+
+      ``C_y    += lr * (1 - delta_y) * hv``
+      ``C_pred -= lr * (1 - delta_y) * hv``
+
+    Returns ``(new class_hvs, wrong)``. This IS the step body of
+    ``fragment_model.retrain_epoch`` — the offline epoch is a scan of it.
+    """
+    scores = hdc.class_scores(hv[None, :], class_hvs)[0]           # (C,)
+    pred = jnp.argmax(scores)
+    delta = scores[y]
+    rate = lr * (1.0 - delta)
+    wrong = pred != y
+    upd = jnp.zeros_like(class_hvs).at[y].set(rate * hv)
+    upd = upd.at[pred].add(jnp.where(wrong, -rate, 0.0) * hv)
+    class_hvs = class_hvs + jnp.where(wrong, 1.0, 0.0) * upd
+    return class_hvs, wrong
+
+
+def pseudo_update(class_hvs: Array, hv: Array, *, lr: float = 1.0,
+                  confidence: float = 0.25) -> tuple[Array, Array]:
+    """One confidence-gated self-training update (no label), pure.
+
+    The sample is pseudo-labeled ``argmax`` and the predicted class is
+    *reinforced* (pulled toward the sample) — but only when the top-2
+    score margin clears ``confidence``. (The perceptron rule itself would
+    be a no-op under its own prediction, so self-training needs this
+    reinforcement form; the gate keeps it from chasing noise.)
+
+    Returns ``(new class_hvs, updated)``.
+    """
+    scores = hdc.class_scores(hv[None, :], class_hvs)[0]           # (C,)
+    top2 = jax.lax.top_k(scores, 2)[0]
+    pred = jnp.argmax(scores)
+    margin = top2[0] - top2[1]
+    rate = lr * (1.0 - scores[pred])
+    confident = margin >= confidence
+    upd = jnp.zeros_like(class_hvs).at[pred].set(rate * hv)
+    class_hvs = class_hvs + jnp.where(confident, 1.0, 0.0) * upd
+    return class_hvs, confident
+
+
+def chunk_update(class_hvs: Array, hvs: Array, labels: Array, *,
+                 lr: float = 1.0,
+                 valid: Array | None = None) -> tuple[Array, Array]:
+    """Fold a chunk of labeled samples through :func:`online_update`.
+
+    ``valid`` masks padded tail samples (they leave the state untouched).
+    Each step scores against the running state, so chaining
+    ``chunk_update`` over consecutive chunks reproduces ``retrain_epoch``
+    over the concatenated sequence exactly, for any chunk size.
+
+    Returns ``(new class_hvs, wrong (N,) bool)``.
+    """
+    if valid is None:
+        valid = jnp.ones(hvs.shape[0], bool)
+
+    def step(chvs, xyv):
+        hv, y, v = xyv
+        new, wrong = online_update(chvs, hv, y, lr)
+        return jnp.where(v, new, chvs), wrong & v   # exact select: a masked
+        # step must leave the state bitwise untouched (chunking invariance)
+
+    return jax.lax.scan(step, class_hvs,
+                        (hvs, labels, valid.astype(bool)))
+
+
+def chunk_update_pseudo(class_hvs: Array, hvs: Array, *, lr: float = 1.0,
+                        confidence: float = 0.25,
+                        valid: Array | None = None) -> tuple[Array, Array]:
+    """Fold a chunk of *unlabeled* samples through :func:`pseudo_update`.
+
+    Returns ``(new class_hvs, updated (N,) bool)``.
+    """
+    if valid is None:
+        valid = jnp.ones(hvs.shape[0], bool)
+
+    def step(chvs, xv):
+        hv, v = xv
+        new, did = pseudo_update(chvs, hv, lr=lr, confidence=confidence)
+        return jnp.where(v, new, chvs), did & v
+
+    return jax.lax.scan(step, class_hvs, (hvs, valid.astype(bool)))
+
+
+def apply_chunk(config: AdaptConfig, class_hvs: Array, hvs: Array,
+                labels: Array, valid: Array | None = None
+                ) -> tuple[Array, Array]:
+    """Dispatch one chunk of samples through the configured update mode.
+
+    In ``"pseudo"`` mode ``labels`` is ignored (pass anything — the
+    runners pass zeros when the caller gave none).
+    """
+    if config.mode == "label":
+        return chunk_update(class_hvs, hvs, labels, lr=config.lr,
+                            valid=valid)
+    if config.mode == "pseudo":
+        return chunk_update_pseudo(class_hvs, hvs, lr=config.lr,
+                                   confidence=config.confidence,
+                                   valid=valid)
+    raise ValueError(f"unknown adaptation mode {config.mode!r}")

@@ -44,7 +44,11 @@ def similarity(queries: Array, class_hvs: Array, *, block_n: int = 256,
 
 
 precompute_tiles = _ss.precompute_tiles
+precompute_geometry = _ss.precompute_geometry
+retile_classes = _ss.retile_classes
+retile_classes_fleet = _ss.retile_classes_fleet
 ScoreTiles = _ss.ScoreTiles
+ScoreGeometry = _ss.ScoreGeometry
 
 
 def fragment_score_map(frame: Array, class_hvs: Array, B0: Array, b: Array,
@@ -102,8 +106,16 @@ def fragment_score_map_fleet(frames: Array, class_hvs: Array, B0: Array,
     are identical to S independent per-stream calls.
     """
     S, C, H, W = frames.shape
-    maps = fragment_score_map_batch(
-        frames.reshape(S * C, H, W), class_hvs, B0, b, h=h, w=w,
-        stride=stride, nonlinearity=nonlinearity, tiles=tiles,
-        block_d=block_d)
+    if tiles is not None and tiles.cpos_t.ndim == 4:
+        # per-stream classifiers (online fleet adaptation): one launch,
+        # stream-indexed class-tile BlockSpecs inside the shared grid.
+        maps = _ss.fragment_scores_batch(
+            frames.reshape(S * C, H, W), tiles, h=h, w=w, stride=stride,
+            nonlinearity=nonlinearity, interpret=_interpret(),
+            frames_per_stream=C)
+    else:
+        maps = fragment_score_map_batch(
+            frames.reshape(S * C, H, W), class_hvs, B0, b, h=h, w=w,
+            stride=stride, nonlinearity=nonlinearity, tiles=tiles,
+            block_d=block_d)
     return maps.reshape(S, C, *maps.shape[1:])

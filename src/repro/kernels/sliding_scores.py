@@ -35,8 +35,29 @@ acc (mx, TD) — independent of N.
 kernel; ``fragment_scores_batch`` is the chunked entry point used by
 ``repro.sensing.stream``.
 
-Precomputation (once per model, host-side): circularly padded base slabs
-and pre-rotated bias/class tiles — see :func:`precompute_tiles`.
+Precomputation is split along the *mutability* boundary of the model
+(online learning — paper §I "real-time learning"):
+
+* :class:`ScoreGeometry` — the expensive, class-independent part: circularly
+  padded base slabs, the pre-rotated RFF bias tiles, and the rotation
+  gather ``idx`` itself. Depends only on ``(B0, b, W, w, stride, block_d)``;
+  computed host-side once per (model-geometry, frame-width) by
+  :func:`precompute_geometry`.
+* class tiles — the cheap, class-*dependent* part: the pre-rotated
+  positive/negative class hypervector tiles plus their L2 norms. Produced
+  from a geometry by the **jitted, device-side** :func:`retile_classes`:
+  one gather per class through the stored ``idx`` plus two norms. Updating
+  the classifier mid-stream (the online-learning hot path) costs a
+  ``retile_classes`` call — never a host-side re-precompute.
+
+:class:`ScoreTiles` = geometry + class tiles; :func:`precompute_tiles`
+(the historical all-in-one entry point) is now exactly
+``retile_classes(precompute_geometry(...), class_hvs)``.
+
+For fleets adapting a *per-stream* classifier, ``fragment_scores_batch``
+accepts class tiles with a leading stream axis (``frames_per_stream``):
+the kernel grid is unchanged, but the class-tile BlockSpec index maps pick
+stream ``n // C``'s tiles for batch element ``n`` — still ONE launch.
 """
 
 from __future__ import annotations
@@ -57,22 +78,67 @@ Array = jax.Array
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class ScoreTiles:
-    """Per-model precomputed kernel inputs (see module docstring)."""
+class ScoreGeometry:
+    """Class-independent kernel precompute (see module docstring).
+
+    Depends only on ``(B0, b)`` and the frame geometry — *not* on the class
+    hypervectors, so it survives every online-learning model update. The
+    stored rotation gather ``idx`` is what makes class updates cheap:
+    re-tiling a new classifier is one gather through it per class.
+    """
     slabs: Array      # (n_dt, h, TD + W - 1) circularly padded base rows
     bias_t: Array     # (n_dt, mx, TD) pre-rotated RFF bias tiles
-    cpos_t: Array     # (n_dt, mx, TD) pre-rotated positive class tiles
-    cneg_t: Array     # (n_dt, mx, TD) pre-rotated negative class tiles
-    cpos_norm: Array  # () L2 of positive class hypervector
-    cneg_norm: Array  # () L2 of negative class hypervector
+    idx: Array        # (n_dt, mx, TD) i32 rotation gather into a (D,) vector
     block_d: int = dataclasses.field(metadata={"static": True})
     w: int = dataclasses.field(metadata={"static": True})
     stride: int = dataclasses.field(metadata={"static": True})
 
 
-def precompute_tiles(B0: Array, b: Array, class_hvs: Array, *, W: int,
-                     w: int, stride: int, block_d: int = 512) -> ScoreTiles:
-    """Host-side, once per (model, frame-width): slabs + rotated tiles."""
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScoreTiles:
+    """Geometry + class-dependent tiles: the full kernel input bundle.
+
+    ``cpos_t``/``cneg_t`` are ``(n_dt, mx, TD)`` for a single shared
+    classifier, or ``(S, n_dt, mx, TD)`` (with ``(S,)`` norms) for a fleet
+    adapting per-stream classifiers (see :func:`fragment_scores_batch`).
+    """
+    geom: ScoreGeometry
+    cpos_t: Array     # ([S,] n_dt, mx, TD) pre-rotated positive class tiles
+    cneg_t: Array     # ([S,] n_dt, mx, TD) pre-rotated negative class tiles
+    cpos_norm: Array  # ([S]) L2 of positive class hypervector
+    cneg_norm: Array  # ([S]) L2 of negative class hypervector
+
+    # Back-compat passthroughs (pre-split callers read these off the tiles).
+    @property
+    def slabs(self) -> Array:
+        return self.geom.slabs
+
+    @property
+    def bias_t(self) -> Array:
+        return self.geom.bias_t
+
+    @property
+    def block_d(self) -> int:
+        return self.geom.block_d
+
+    @property
+    def w(self) -> int:
+        return self.geom.w
+
+    @property
+    def stride(self) -> int:
+        return self.geom.stride
+
+
+def precompute_geometry(B0: Array, b: Array, *, W: int, w: int, stride: int,
+                        block_d: int = 512) -> ScoreGeometry:
+    """Host-side, once per (model-geometry, frame-width): slabs + bias + idx.
+
+    The expensive precompute. Everything class-dependent is deferred to
+    :func:`retile_classes` so the classifier can change without re-running
+    this.
+    """
     h, dim = B0.shape
     assert SHIFT == -1, "precompute assumes the paper's left-shift"
     td = block_d if dim % block_d == 0 else dim
@@ -89,17 +155,68 @@ def precompute_tiles(B0: Array, b: Array, class_hvs: Array, *, W: int,
     kxs = jnp.arange(mx)[None, :, None] * stride
     js = jnp.arange(td)[None, None, :]
     idx = (dts + js + kxs) % dim                            # (n_dt, mx, TD)
-    return ScoreTiles(
+    return ScoreGeometry(
         slabs=slabs.astype(jnp.float32),
         bias_t=b[idx].astype(jnp.float32),
-        cpos_t=class_hvs[1][idx].astype(jnp.float32),
-        cneg_t=class_hvs[0][idx].astype(jnp.float32),
-        cpos_norm=jnp.linalg.norm(class_hvs[1].astype(jnp.float32)),
-        cneg_norm=jnp.linalg.norm(class_hvs[0].astype(jnp.float32)),
+        idx=idx,
         block_d=td,
         w=w,
         stride=stride,
     )
+
+
+@jax.jit
+def retile_classes(geom: ScoreGeometry, class_hvs: Array) -> ScoreTiles:
+    """Device-side classifier (re-)tiling: ``(2, D)`` -> :class:`ScoreTiles`.
+
+    One gather per class through the stored rotation ``idx`` plus two norms
+    — the entire cost of installing an updated classifier into the scoring
+    kernel. Jitted: safe to call inside a larger jitted streaming step
+    (the online-adaptation hot path) as well as standalone.
+
+    ``vmap`` over ``class_hvs`` (``(S, 2, D)``) yields the per-stream tile
+    stack the fleet's per-stream adaptation mode consumes.
+    """
+    cpos = class_hvs[1].astype(jnp.float32)
+    cneg = class_hvs[0].astype(jnp.float32)
+    return ScoreTiles(
+        geom=geom,
+        cpos_t=cpos[geom.idx],
+        cneg_t=cneg[geom.idx],
+        cpos_norm=jnp.linalg.norm(cpos),
+        cneg_norm=jnp.linalg.norm(cneg),
+    )
+
+
+@jax.jit
+def retile_classes_fleet(geom: ScoreGeometry, class_hvs: Array) -> ScoreTiles:
+    """Per-stream classifier tiling: ``(S, 2, D)`` -> stacked tiles.
+
+    The geometry stays shared (un-batched); only the class tiles and norms
+    grow a leading stream axis, ready for
+    ``fragment_scores_batch(..., frames_per_stream=C)``.
+    """
+    cpos = class_hvs[:, 1].astype(jnp.float32)               # (S, D)
+    cneg = class_hvs[:, 0].astype(jnp.float32)
+    return ScoreTiles(
+        geom=geom,
+        cpos_t=jax.vmap(lambda v: v[geom.idx])(cpos),        # (S,n_dt,mx,TD)
+        cneg_t=jax.vmap(lambda v: v[geom.idx])(cneg),
+        cpos_norm=jnp.linalg.norm(cpos, axis=-1),            # (S,)
+        cneg_norm=jnp.linalg.norm(cneg, axis=-1),
+    )
+
+
+def precompute_tiles(B0: Array, b: Array, class_hvs: Array, *, W: int,
+                     w: int, stride: int, block_d: int = 512) -> ScoreTiles:
+    """Host-side, once per (model, frame-width): geometry + class tiles.
+
+    The historical all-in-one entry point; now literally the composition
+    ``retile_classes(precompute_geometry(...), class_hvs)``.
+    """
+    geom = precompute_geometry(B0, b, W=W, w=w, stride=stride,
+                               block_d=block_d)
+    return retile_classes(geom, class_hvs)
 
 
 def window_norms(frame: Array, h: int, w: int, stride: int) -> Array:
@@ -187,16 +304,26 @@ def _score_kernel(frame_ref, slab_ref, bias_ref, cpos_ref, cneg_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("h", "w", "stride",
-                                             "nonlinearity", "interpret"))
+                                             "nonlinearity", "interpret",
+                                             "frames_per_stream"))
 def fragment_scores_batch(frames: Array, tiles: ScoreTiles, *, h: int,
                           w: int, stride: int,
                           nonlinearity: NonLin = "rff",
-                          interpret: bool = False) -> Array:
+                          interpret: bool = False,
+                          frames_per_stream: int | None = None) -> Array:
     """(N, H, W) frames -> (N, my, mx) score maps in one kernel launch.
 
-    The whole batch shares one :class:`ScoreTiles` precompute; the Pallas
-    grid is ``(N, my, n_dt)`` with the batch/row axes parallel and the
-    hyperdimension tiles as the sequential reduction.
+    The whole batch shares one :class:`ScoreGeometry` precompute; the
+    Pallas grid is ``(N, my, n_dt)`` with the batch/row axes parallel and
+    the hyperdimension tiles as the sequential reduction.
+
+    With shared class tiles (``tiles.cpos_t.ndim == 3``) every frame is
+    scored against the same classifier. With *per-stream* class tiles
+    (``(S, n_dt, mx, TD)``, from ``vmap(retile_classes)``) the batch is
+    interpreted as S streams of ``frames_per_stream`` frames each (must be
+    static and divide N): batch element ``n`` reads stream ``n // C``'s
+    class tiles via the BlockSpec index map — same grid, same kernel body,
+    still ONE launch. That is the fleet's per-stream online-learning path.
     """
     N, H, W = frames.shape
     my = (H - h) // stride + 1
@@ -205,6 +332,24 @@ def fragment_scores_batch(frames: Array, tiles: ScoreTiles, *, h: int,
     td = tiles.block_d
     assert h_b == h and slab_len == td + W - 1, (tiles.slabs.shape, td, W)
     assert tiles.w == w and tiles.stride == stride
+
+    per_stream = tiles.cpos_t.ndim == 4
+    if per_stream:
+        if frames_per_stream is None:
+            raise ValueError("per-stream class tiles need frames_per_stream")
+        C = frames_per_stream
+        S = tiles.cpos_t.shape[0]
+        if S * C != N:
+            raise ValueError(f"per-stream tiles: S={S} streams x "
+                             f"C={C} frames != batch N={N}")
+        # (S, n_dt, mx, td) -> (S*n_dt, mx, td): batch n reads stream n//C.
+        cpos_t = tiles.cpos_t.reshape(S * n_dt, mx, td)
+        cneg_t = tiles.cneg_t.reshape(S * n_dt, mx, td)
+        class_spec = pl.BlockSpec(
+            (1, mx, td), lambda n, i, j: ((n // C) * n_dt + j, 0, 0))
+    else:
+        cpos_t, cneg_t = tiles.cpos_t, tiles.cneg_t
+        class_spec = pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0))
 
     norms = window_norms_batch(frames, h, w, stride)         # (N, my, mx)
 
@@ -219,8 +364,8 @@ def fragment_scores_batch(frames: Array, tiles: ScoreTiles, *, h: int,
             pl.BlockSpec((1, H, W), lambda n, i, j: (n, 0, 0)),    # frame
             pl.BlockSpec((1, h, slab_len), lambda n, i, j: (j, 0, 0)),
             pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0)),  # bias
-            pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0)),  # cpos
-            pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0)),  # cneg
+            class_spec,                                            # cpos
+            class_spec,                                            # cneg
             pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),   # norms
         ],
         out_specs=[
@@ -237,9 +382,14 @@ def fragment_scores_batch(frames: Array, tiles: ScoreTiles, *, h: int,
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(frames, tiles.slabs, tiles.bias_t, tiles.cpos_t, tiles.cneg_t, norms)
+    )(frames, tiles.slabs, tiles.bias_t, cpos_t, cneg_t, norms)
 
     qn = jnp.maximum(jnp.sqrt(qq), 1e-9)
+    if per_stream:
+        # per-stream classifier norms broadcast over that stream's frames
+        rep = lambda v: jnp.repeat(v, C)[:, None, None]       # (N, 1, 1)
+        return (dpos / (qn * jnp.maximum(rep(tiles.cpos_norm), 1e-9))
+                - dneg / (qn * jnp.maximum(rep(tiles.cneg_norm), 1e-9)))
     return (dpos / (qn * jnp.maximum(tiles.cpos_norm, 1e-9))
             - dneg / (qn * jnp.maximum(tiles.cneg_norm, 1e-9)))
 

@@ -40,10 +40,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import energy
 from repro.core.hypersense import HyperSenseModel
+from repro.core.online import AdaptConfig
 from repro.core.sensor_control import (ControllerConfig, StreamStats,
                                        stats_from_batch)
 from repro.distributed import sharding as shlib
-from repro.sensing.stream import (adc_view, model_tiles, super_chunk_fn,
+from repro.sensing.stream import (StreamState, adc_view, init_stream_state,
+                                  model_geometry, super_chunk_fn,
                                   super_chunk_step)
 
 Array = jax.Array
@@ -70,16 +72,27 @@ def _build_step(mesh, axes, **static):
     the sharded body is the unsharded body on a local slice of sensors —
     ``check_rep=False`` because there is no replicated output to verify,
     and no collective is ever emitted.
+
+    Sharding composes with adaptation only in ``"per-stream"`` scope
+    (each device updates its own streams' classifiers — still no
+    collectives). A *shared* classifier update is a sequential fold
+    across all streams, so ``FleetRunner`` falls back to the unsharded
+    step for it (see :meth:`FleetRunner._ensure_step`).
     """
     if axes is None:
         return functools.partial(super_chunk_step, **static)
     from jax.experimental.shard_map import shard_map
-    s4, s2, s1 = P(axes, None, None, None), P(axes, None), P(axes)
+    s4, s3, s2, s1 = (P(axes, None, None, None), P(axes, None, None),
+                      P(axes, None), P(axes))
     rep = P()
+    per_stream = (static.get("adapt") is not None
+                  and static["adapt"].scope == "per-stream")
+    state_in = StreamState(class_hvs=s3 if per_stream else rep,
+                           holds=s1, frame_idx=rep)
     return jax.jit(shard_map(
         functools.partial(super_chunk_fn, **static), mesh=mesh,
-        in_specs=(s4, rep, rep, rep, rep, rep, s1, rep),
-        out_specs=(s2, s2, s2, s1),
+        in_specs=(s4, state_in, rep, rep, rep, rep, rep, s2),
+        out_specs=(s2, s2, s2, state_in),
         check_rep=False))
 
 
@@ -140,6 +153,16 @@ class FleetRunner:
     :func:`repro.distributed.sharding.use_mesh` (or an explicit ``mesh=``)
     the sensor axis is ``shard_map``'d across the mesh axes the "sensors"
     rule resolves to.
+
+    ``adapt`` switches on online learning
+    (:class:`~repro.core.online.AdaptConfig`): ``scope="shared"`` folds
+    every stream's samples (time-ordered) into ONE fleet classifier;
+    ``scope="per-stream"`` gives each sensor its own ``(S, 2, D)``
+    classifier — updates are ``vmap``'d over streams, scoring stays one
+    kernel launch (stream-indexed class-tile BlockSpecs), and the sharded
+    step continues to partition cleanly (no collectives). Shared-scope
+    updates are inherently sequential across streams, so that combination
+    falls back to the unsharded step.
     """
 
     def __init__(self, model: HyperSenseModel,
@@ -147,7 +170,8 @@ class FleetRunner:
                  chunk_size: int = 32, backend: str = "jnp",
                  t_detection: int | None = None, block_d: int = 512,
                  adc_bits: int | None = None, adc_sigma: float = 0.0,
-                 adc_key: Array | int = 0, mesh=None):
+                 adc_key: Array | int = 0, mesh=None,
+                 adapt: AdaptConfig | None = None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if adc_sigma > 0.0 and adc_bits is None:
@@ -165,53 +189,123 @@ class FleetRunner:
         self._adc_key = (jax.random.PRNGKey(adc_key)
                          if isinstance(adc_key, int) else adc_key)
         self._mesh = mesh
-        self._tiles = None      # (W, ScoreTiles) — keyed on frame width
-        self._holds = None      # (S,) i32, allocated on first process()
+        self.adapt = adapt
+        self._geom = None       # (W, ScoreGeometry) — class-independent
+        self._tiles = None      # (W, class_hvs-ref, ScoreTiles) frozen path
+        self._state = None      # StreamState, allocated on first process()
         self._n_seen = 0
         self._step = None
         self._step_key = None
 
     def reset(self) -> None:
-        self._holds = None
+        self._state = None
         self._n_seen = 0
+        self._tiles = None
 
     @property
     def holds(self) -> Array | None:
         """(S,) controller hold state after the last processed frame."""
-        return self._holds
+        return None if self._state is None else self._state.holds
+
+    @property
+    def class_hvs(self) -> Array:
+        """The live classifier: ``(2, D)`` shared, ``(S, 2, D)`` per-stream
+        (before the first ``process`` call: the model's)."""
+        return (self.model.class_hvs if self._state is None
+                else self._state.class_hvs)
+
+    def set_class_hvs(self, class_hvs: Array) -> None:
+        """Install an externally updated classifier mid-stream.
+
+        Accepts ``(2, D)`` (broadcast to every stream in per-stream
+        scope) or ``(S, 2, D)`` in per-stream scope. Device-side cost
+        only — next chunk re-tiles via the jitted ``retile_classes``; the
+        identity-keyed tile cache self-invalidates.
+        """
+        class_hvs = jnp.asarray(class_hvs)
+        if class_hvs.ndim == 3 and not self._per_stream():
+            raise ValueError("(S, 2, D) classifiers need "
+                             'adapt scope="per-stream"')
+        if class_hvs.ndim == 2:
+            self.model = self.model._replace(class_hvs=class_hvs)
+        if self._state is None:
+            if class_hvs.ndim == 3:
+                # fleet size is fixed by the stack; allocate state now so
+                # the per-stream classifiers are not silently dropped
+                self._state = init_stream_state(
+                    class_hvs, class_hvs.shape[0], per_stream=True)
+            return  # ndim == 2: first process() initializes from model
+        chvs = class_hvs
+        if self._state.class_hvs.ndim == 3 and chvs.ndim == 2:
+            chvs = jnp.broadcast_to(chvs, self._state.class_hvs.shape)
+        if chvs.shape != self._state.class_hvs.shape:
+            raise ValueError(f"class_hvs shape {chvs.shape} != carried "
+                             f"state {self._state.class_hvs.shape}")
+        self._state = dataclasses.replace(self._state, class_hvs=chvs)
+
+    def _per_stream(self) -> bool:
+        return self.adapt is not None and self.adapt.scope == "per-stream"
+
+    def _ensure_geom(self, W: int):
+        if self._geom is None or self._geom[0] != W:
+            self._geom = (W, model_geometry(self.model, W, self.block_d))
+        return self._geom[1]
 
     def _ensure_tiles(self, W: int):
-        if self.backend != "pallas":
-            return None
-        if self._tiles is None or self._tiles[0] != W:
-            self._tiles = (W, model_tiles(self.model, W, self.block_d))
-        return self._tiles[1]
+        """Frozen-path tile cache, keyed on (width, class-hv identity)."""
+        from repro.kernels import ops as kops
+        chvs = self._state.class_hvs
+        if (self._tiles is None or self._tiles[0] != W
+                or self._tiles[1] is not chvs):
+            self._tiles = (W, chvs,
+                           kops.retile_classes(self._ensure_geom(W), chvs))
+        return self._tiles[2]
 
     def _ensure_step(self, S: int):
         mesh = self._mesh if self._mesh is not None else shlib.current_mesh()
         axes = _sensor_axes(S, mesh)
-        key = (id(mesh) if axes else None, axes)
+        if self.adapt is not None and self.adapt.scope == "shared":
+            # a shared-classifier update folds every stream's samples
+            # sequentially — not partitionable without communication
+            axes = None
+        key = (id(mesh) if axes else None, axes, self.adapt)
         if self._step is None or self._step_key != key:
             m = self.model
             self._step = _build_step(
                 mesh, axes, h=m.h, w=m.w, stride=m.stride,
                 nonlinearity=m.nonlinearity, t_detection=self.t_detection,
-                hold_frames=self.config.hold_frames, backend=self.backend)
+                hold_frames=self.config.hold_frames, backend=self.backend,
+                adapt=self.adapt)
             self._step_key = key
         return self._step
 
-    def process(self, frames) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(S, n, H, W) super-stream -> ((S, n) scores, fired, gated)."""
+    def process(self, frames, labels=None
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(S, n, H, W) super-stream -> ((S, n) scores, fired, gated).
+
+        ``labels`` (``(S, n)`` ints) feeds ``adapt.mode == "label"``
+        updates.
+        """
         frames = jnp.asarray(frames)
         if frames.ndim != 4:
             raise ValueError(f"expected (S, n, H, W) frames, "
                              f"got shape {frames.shape}")
         S, n = frames.shape[:2]
-        if self._holds is None:
-            self._holds = jnp.zeros((S,), jnp.int32)
-        elif self._holds.shape[0] != S:
+        if self.adapt is not None and self.adapt.mode == "label":
+            if labels is None:
+                raise ValueError('adapt.mode == "label" needs per-frame '
+                                 "labels passed to process()")
+            labels = jnp.asarray(labels, jnp.int32)
+            if labels.shape != (S, n):
+                raise ValueError(f"labels shape {labels.shape} != "
+                                 f"(S, n) = {(S, n)}")
+        if self._state is None:
+            self._state = init_stream_state(self.model.class_hvs, S,
+                                            per_stream=self._per_stream())
+        elif self._state.holds.shape[0] != S:
             raise ValueError(f"fleet size changed: carried state has "
-                             f"{self._holds.shape[0]} streams, got {S}")
+                             f"{self._state.holds.shape[0]} streams, "
+                             f"got {S}")
         if self.adc_bits is not None:
             keys = jax.vmap(
                 lambda s: jax.random.fold_in(self._adc_key, s))(
@@ -222,20 +316,35 @@ class FleetRunner:
         self._n_seen += n
 
         m = self.model
-        tiles = self._ensure_tiles(frames.shape[-1])
+        if self.backend == "pallas":
+            tiles = (self._ensure_geom(frames.shape[-1])
+                     if self.adapt is not None
+                     else self._ensure_tiles(frames.shape[-1]))
+        else:
+            tiles = None
         step = self._ensure_step(S)
         scores = np.empty((S, n), np.float32)
         fired = np.empty((S, n), bool)
         gated = np.empty((S, n), bool)
         for start in range(0, n, self.chunk_size):
             chunk = frames[:, start:start + self.chunk_size]
+            lab = (labels[:, start:start + self.chunk_size]
+                   if labels is not None
+                   else jnp.zeros(chunk.shape[:2], jnp.int32))
             n_valid = chunk.shape[1]
             if n_valid < self.chunk_size:
                 pad = self.chunk_size - n_valid
                 chunk = jnp.pad(chunk, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            s, f, g, self._holds = step(
-                chunk, m.class_hvs, m.B0, m.b, tiles,
-                jnp.float32(m.t_score), self._holds, jnp.int32(n_valid))
+                lab = jnp.pad(lab, ((0, 0), (0, pad)))
+            s, f, g, new_state = step(
+                chunk, self._state, m.B0, m.b, tiles,
+                jnp.float32(m.t_score), jnp.int32(n_valid), lab)
+            if self.adapt is None:
+                # keep the ORIGINAL class-hv ref: values are untouched and
+                # the identity-keyed tile cache must not churn
+                new_state = dataclasses.replace(
+                    new_state, class_hvs=self._state.class_hvs)
+            self._state = new_state
             sl = slice(start, start + n_valid)
             scores[:, sl] = np.asarray(s)[:, :n_valid]
             fired[:, sl] = np.asarray(f)[:, :n_valid]
@@ -249,17 +358,23 @@ def simulate_fleet(model: HyperSenseModel, frames, labels,
                    t_detection: int | None = None, block_d: int = 512,
                    adc_bits: int | None = None, adc_sigma: float = 0.0,
                    adc_key: Array | int = 0, mesh=None,
+                   adapt: AdaptConfig | None = None,
                    energy_params: energy.EnergyParams | None = None
                    ) -> FleetReport:
     """Run a whole ``(S, N, H, W)`` fleet recording end-to-end.
 
     One :class:`FleetRunner` pass followed by :func:`fleet_report`:
     per-stream :class:`StreamStats` (identical to S independent
-    single-stream simulations) plus the fleet energy account.
+    single-stream simulations) plus the fleet energy account. ``adapt``
+    switches on online learning; in ``"label"`` mode the ground-truth
+    ``labels`` double as the feedback signal.
     """
     runner = FleetRunner(model, config, chunk_size=chunk_size,
                          backend=backend, t_detection=t_detection,
                          block_d=block_d, adc_bits=adc_bits,
-                         adc_sigma=adc_sigma, adc_key=adc_key, mesh=mesh)
-    _, fired, gated = runner.process(frames)
+                         adc_sigma=adc_sigma, adc_key=adc_key, mesh=mesh,
+                         adapt=adapt)
+    feed = (labels if adapt is not None and adapt.mode == "label"
+            else None)
+    _, fired, gated = runner.process(frames, labels=feed)
     return fleet_report(fired, gated, labels, energy_params)

@@ -1,4 +1,4 @@
-"""Batched streaming runtime: chunked scoring + gating (one jit per chunk).
+"""Batched streaming runtime: chunked scoring + gating + online learning.
 
 The paper's sensing loop (§III-B/C) scores *every* incoming frame with the
 HDC HyperSense model and gates the expensive high-precision path in real
@@ -9,10 +9,35 @@ chunk runs
 
   batched fragment scoring  ->  frame_detection_score  ->  threshold
   ->  SensorController hysteresis (as a ``lax.scan``)
+  ->  (optionally) an online classifier update
 
 inside a single jitted step. On the ``pallas`` backend the whole chunk is
-ONE kernel launch (grid ``(N, my, n_dt)``) against one per-model
-:class:`~repro.kernels.sliding_scores.ScoreTiles` precompute.
+ONE kernel launch (grid ``(N, my, n_dt)``).
+
+**Mutable model state.** The model is no longer frozen at construction:
+every chunk threads a :class:`StreamState` pytree — class hypervectors,
+per-stream gate holds, absolute frame index — through
+:func:`super_chunk_fn`. With ``adapt=None`` the class hypervectors simply
+pass through unchanged and the step is the frozen scorer (bitwise
+identical to the pre-online-learning runtime on the ``pallas`` backend).
+With an :class:`~repro.core.online.AdaptConfig` the step also
+
+  1. extracts each frame's *top-scoring fragment*, re-encodes it (an
+     ``O(h*w*D)`` matmul per frame — tiny next to scoring), and
+  2. folds those sample hypervectors through the similarity-scaled
+     perceptron rule (``repro.core.online``) — supervised label feedback
+     or confidence-gated pseudo-labels — producing the next chunk's
+     classifier.
+
+On the ``pallas`` backend the adaptive step holds only the class-agnostic
+:class:`~repro.kernels.sliding_scores.ScoreGeometry`; the fresh classifier
+is installed by the jitted, device-side ``retile_classes`` (one gather per
+class) — no host-side ``precompute_tiles`` ever runs mid-stream.
+
+Within a chunk, scoring uses the chunk-start classifier while the update
+folds the chunk's samples sequentially (exactly ``retrain_epoch`` over the
+extracted sample sequence); ``chunk_size=1`` recovers pure per-frame
+online learning.
 
 :func:`gate_scan` is the exact jnp twin of
 :class:`~repro.core.sensor_control.SensorController`; the carried ``hold``
@@ -23,17 +48,47 @@ the frame-at-a-time ``simulate_stream``.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hypersense
+from repro.core import hypersense, online
+from repro.core.encoding import encode_fragments, flat_perm_base
 from repro.core.hypersense import HyperSenseModel, frame_detection_score
+from repro.core.online import AdaptConfig
 from repro.core.sensor_control import (ControllerConfig, StreamStats,
                                        stats_from)
 from repro.sensing import adc as adc_sim
 
 Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamState:
+    """Mutable stream state threaded through every chunk step.
+
+    ``class_hvs`` is ``(2, D)`` for a single stream / fleet-shared
+    classifier, or ``(S, 2, D)`` when a fleet adapts per-stream models.
+    ``holds`` is the ``(S,)`` controller hysteresis state; ``frame_idx``
+    the absolute index of the next frame (i32 scalar).
+    """
+    class_hvs: Array
+    holds: Array
+    frame_idx: Array
+
+
+def init_stream_state(class_hvs: Array, n_streams: int,
+                      per_stream: bool = False) -> StreamState:
+    """Fresh state: model's classifier, zero holds, frame 0."""
+    chvs = jnp.asarray(class_hvs)
+    if per_stream and chvs.ndim == 2:
+        chvs = jnp.broadcast_to(chvs, (n_streams, *chvs.shape))
+    return StreamState(class_hvs=chvs,
+                       holds=jnp.zeros((n_streams,), jnp.int32),
+                       frame_idx=jnp.zeros((), jnp.int32))
 
 
 def adc_view(frames: Array, bits: int, *, sigma: float = 0.0,
@@ -74,30 +129,81 @@ def gate_scan(decisions: Array, hold_frames: int,
     return gated, holds
 
 
-def super_chunk_fn(frames, class_hvs, B0, b, tiles, t_score, holds,
-                   n_valid, *, h, w, stride, nonlinearity, t_detection,
-                   hold_frames, backend):
+def _top_fragment_hvs(frames: Array, maps: Array, B0: Array, b: Array, *,
+                      h: int, w: int, stride: int, mx: int,
+                      nonlinearity) -> Array:
+    """Re-encode each frame's top-scoring fragment -> ``(S, C, D)``.
+
+    The online update's sample stream: per frame, the fragment the model
+    found most object-like (hard positive on object frames, hard negative
+    on empty ones). One ``(h*w, D)`` projection per frame — negligible
+    next to the full score map.
+    """
+    S, C, H, W = frames.shape
+    top = jnp.argmax(maps.reshape(S, C, -1), axis=-1)            # (S, C)
+    iy = (top // mx) * stride
+    ix = (top % mx) * stride
+    crop = jax.vmap(jax.vmap(
+        lambda f, y, x: jax.lax.dynamic_slice(f, (y, x), (h, w))))
+    frags = crop(frames, iy, ix)                                 # (S,C,h,w)
+    Bf = flat_perm_base(B0, w)                                   # (h*w, D)
+    hv = encode_fragments(frags.reshape(S * C, h, w), Bf, b,
+                          nonlinearity=nonlinearity, normalize=True)
+    return hv.reshape(S, C, -1)
+
+
+def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
+                   n_valid, labels, *, h, w, stride, nonlinearity,
+                   t_detection, hold_frames, backend,
+                   adapt: AdaptConfig | None = None):
     """One streaming step over an ``(S, C, H, W)`` super-chunk.
 
     The shared core of both runners: ``StreamRunner`` calls it with
     ``S = 1``, :class:`~repro.sensing.fleet.FleetRunner` with S concurrent
     streams. The ``S*C`` axis is flattened into the batched scorer (one
     kernel launch on the ``pallas`` backend) and each stream's gate is a
-    ``vmap``'d :func:`gate_scan` — the batch axis is parallel everywhere,
-    so a fleet step is exactly S independent stream steps.
+    ``vmap``'d :func:`gate_scan`.
 
-    ``n_valid`` masks a padded tail chunk; pad frames never fire, and the
-    carried ``(S,)`` hold state is read at the last *valid* frame.
+    ``state`` carries the mutable model: scoring uses
+    ``state.class_hvs``; with ``adapt`` set, the returned state holds the
+    chunk-updated classifier. On the ``pallas`` backend ``tiles`` is the
+    full host-precomputed :class:`~repro.kernels.sliding_scores.ScoreTiles`
+    when frozen (``adapt=None`` — that path's kernel inputs, and hence
+    outputs, are bitwise identical to the pre-refactor runtime), or just
+    the :class:`~repro.kernels.sliding_scores.ScoreGeometry` when
+    adapting — the current classifier is re-tiled *inside* the step by
+    the jitted ``retile_classes`` gather.
+
+    ``n_valid`` masks a padded tail chunk; pad frames never fire, never
+    contribute updates, and the carried ``(S,)`` hold state is read at the
+    last *valid* frame. ``labels`` is ``(S, C)`` i32 — only consumed in
+    ``adapt.mode == "label"`` (pass zeros otherwise).
+
+    Returns ``(scores (S, C), fired, gated, new_state)``.
     """
     S, C, H, W = frames.shape
     my = (H - h) // stride + 1
     mx = (W - w) // stride + 1
+    class_hvs = state.class_hvs
+    per_stream = adapt is not None and adapt.scope == "per-stream"
 
     if backend == "pallas":
         from repro.kernels import ops as kops
+        if adapt is None:
+            ktiles = tiles                       # frozen: host precompute
+        elif per_stream:                         # tiles is a ScoreGeometry
+            ktiles = kops.retile_classes_fleet(tiles, class_hvs)
+        else:
+            ktiles = kops.retile_classes(tiles, class_hvs)
         maps = kops.fragment_score_map_fleet(
             frames, class_hvs, B0, b, h=h, w=w, stride=stride,
-            nonlinearity=nonlinearity, tiles=tiles)          # (S, C, my, mx)
+            nonlinearity=nonlinearity, tiles=ktiles)         # (S, C, my, mx)
+    elif per_stream:
+        maps = jax.vmap(lambda fs, cv: jax.vmap(
+            lambda f: hypersense.fragment_score_map(
+                f, cv, B0, b, h=h, w=w, stride=stride,
+                nonlinearity=nonlinearity, backend=backend))(fs))(
+                    frames, class_hvs)
     else:
         maps = jax.vmap(lambda f: hypersense.fragment_score_map(
             f, class_hvs, B0, b, h=h, w=w, stride=stride,
@@ -116,34 +222,75 @@ def super_chunk_fn(frames, class_hvs, B0, b, tiles, t_score, holds,
         fired = (scores > t_score) & valid[None, :]
 
     gated, holds_seq = jax.vmap(
-        lambda f, h0: gate_scan(f, hold_frames, h0))(fired, holds)
+        lambda f, h0: gate_scan(f, hold_frames, h0))(fired, state.holds)
     hold_out = jnp.where(n_valid > 0,
-                         holds_seq[:, jnp.maximum(n_valid - 1, 0)], holds)
-    return scores, fired, gated, hold_out
+                         holds_seq[:, jnp.maximum(n_valid - 1, 0)],
+                         state.holds)
+
+    if adapt is not None:
+        hv = _top_fragment_hvs(frames, maps, B0, b, h=h, w=w,
+                               stride=stride, mx=mx,
+                               nonlinearity=nonlinearity)    # (S, C, D)
+        labels = labels.astype(jnp.int32)
+        if per_stream:
+            class_hvs = jax.vmap(
+                lambda cv, hs, ls: online.apply_chunk(
+                    adapt, cv, hs, ls, valid)[0])(class_hvs, hv, labels)
+        else:
+            # one shared classifier: fold samples in time order (stream
+            # index breaks ties), matching real arrival order
+            dim = hv.shape[-1]
+            hv_t = hv.transpose(1, 0, 2).reshape(C * S, dim)
+            lab_t = labels.T.reshape(C * S)
+            val_t = jnp.repeat(valid, S)
+            class_hvs = online.apply_chunk(adapt, class_hvs, hv_t, lab_t,
+                                           val_t)[0]
+
+    new_state = StreamState(class_hvs=class_hvs, holds=hold_out,
+                            frame_idx=state.frame_idx
+                            + jnp.asarray(n_valid, jnp.int32))
+    return scores, fired, gated, new_state
 
 
 #: module-level jit: every runner instance shares one trace cache.
 super_chunk_step = jax.jit(
     super_chunk_fn, static_argnames=("h", "w", "stride", "nonlinearity",
                                      "t_detection", "hold_frames",
-                                     "backend"))
+                                     "backend", "adapt"))
+
+
+def model_geometry(model: HyperSenseModel, W: int, block_d: int):
+    """Class-independent ScoreGeometry for ``model`` on width-``W`` frames."""
+    from repro.kernels import ops as kops
+    return kops.precompute_geometry(model.B0, model.b, W=W, w=model.w,
+                                    stride=model.stride, block_d=block_d)
 
 
 def model_tiles(model: HyperSenseModel, W: int, block_d: int):
     """ScoreTiles precompute for ``model`` on width-``W`` frames."""
     from repro.kernels import ops as kops
-    return kops.precompute_tiles(model.B0, model.b, model.class_hvs, W=W,
-                                 w=model.w, stride=model.stride,
-                                 block_d=block_d)
+    return kops.retile_classes(model_geometry(model, W, block_d),
+                               model.class_hvs)
 
 
 class StreamRunner:
-    """Stateful chunked scorer+gate. ``process(frames)`` any number of times.
+    """Stateful chunked scorer+gate(+learner). ``process(frames)`` freely.
 
-    The controller ``hold`` state carries across ``process`` calls, so a
-    long stream can be fed incrementally in arbitrary slices; every
-    internal step is one fixed-shape jit call (tail chunks are padded and
-    masked, so no recompiles).
+    The :class:`StreamState` — controller ``hold``, absolute frame index,
+    and (with ``adapt``) the live class hypervectors — carries across
+    ``process`` calls, so a long stream can be fed incrementally in
+    arbitrary slices; every internal step is one fixed-shape jit call
+    (tail chunks are padded and masked, so no recompiles).
+
+    ``adapt=None`` (default) is the frozen runtime — bitwise identical to
+    the pre-online-learning runner on the ``pallas`` backend. With an
+    :class:`~repro.core.online.AdaptConfig` the classifier updates every
+    chunk; in ``"label"`` mode pass per-frame labels to ``process``. The
+    live classifier is ``runner.class_hvs``; :meth:`set_class_hvs`
+    installs an external update mid-stream (a jitted ``retile_classes``
+    gather on the ``pallas`` backend — never a host-side re-precompute;
+    the tile cache is keyed on class-hv *identity*, so stale tiles are
+    impossible).
     """
 
     def __init__(self, model: HyperSenseModel,
@@ -151,12 +298,17 @@ class StreamRunner:
                  chunk_size: int = 32, backend: str = "jnp",
                  t_detection: int | None = None, block_d: int = 512,
                  adc_bits: int | None = None, adc_sigma: float = 0.0,
-                 adc_key: Array | int = 0):
+                 adc_key: Array | int = 0,
+                 adapt: AdaptConfig | None = None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if adc_sigma > 0.0 and adc_bits is None:
             raise ValueError("adc_sigma > 0 without adc_bits: the ADC is "
                              "only in the loop when adc_bits is set")
+        if adapt is not None and adapt.scope == "per-stream":
+            raise ValueError('scope="per-stream" is a FleetRunner mode; '
+                             "a StreamRunner has exactly one stream — "
+                             'use scope="shared"')
         self.model = model
         self.config = config or ControllerConfig()
         self.chunk_size = chunk_size
@@ -168,53 +320,110 @@ class StreamRunner:
         self.adc_sigma = adc_sigma
         self._adc_key = (jax.random.PRNGKey(adc_key)
                          if isinstance(adc_key, int) else adc_key)
-        self._tiles = None      # (W, ScoreTiles) — keyed on frame width
-        self._hold = jnp.zeros((), jnp.int32)
+        self.adapt = adapt
+        self._geom = None       # (W, ScoreGeometry) — class-independent
+        self._tiles = None      # (W, class_hvs-ref, ScoreTiles) frozen path
+        self._state = init_stream_state(model.class_hvs, 1)
         self._n_seen = 0        # absolute frame index (keys the ADC noise)
 
     def reset(self) -> None:
-        self._hold = jnp.zeros((), jnp.int32)
+        self._state = init_stream_state(self.model.class_hvs, 1)
         self._n_seen = 0
+        self._tiles = None
+
+    @property
+    def class_hvs(self) -> Array:
+        """The live classifier (updates under ``adapt``)."""
+        return self._state.class_hvs
+
+    @property
+    def _hold(self) -> Array:   # back-compat scalar view of the gate state
+        return self._state.holds[0]
+
+    def set_class_hvs(self, class_hvs: Array) -> None:
+        """Install an externally updated classifier mid-stream.
+
+        Device-side cost only: the next chunk re-tiles via the jitted
+        ``retile_classes`` gather against the cached geometry (the frozen
+        tile cache self-invalidates — it is keyed on class-hv identity).
+        """
+        class_hvs = jnp.asarray(class_hvs)
+        self.model = self.model._replace(class_hvs=class_hvs)
+        self._state = dataclasses.replace(self._state,
+                                          class_hvs=class_hvs)
+
+    def _ensure_geom(self, W: int):
+        if self._geom is None or self._geom[0] != W:
+            self._geom = (W, model_geometry(self.model, W, self.block_d))
+        return self._geom[1]
 
     def _ensure_tiles(self, W: int):
-        if self.backend != "pallas":
-            return None
-        if self._tiles is None or self._tiles[0] != W:
-            self._tiles = (W, model_tiles(self.model, W, self.block_d))
-        return self._tiles[1]
+        """Frozen-path tile cache, keyed on (width, class-hv identity)."""
+        from repro.kernels import ops as kops
+        chvs = self._state.class_hvs
+        if (self._tiles is None or self._tiles[0] != W
+                or self._tiles[1] is not chvs):
+            self._tiles = (W, chvs,
+                           kops.retile_classes(self._ensure_geom(W), chvs))
+        return self._tiles[2]
 
-    def process(self, frames) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def process(self, frames, labels=None
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(n, H, W) frames -> (scores (n,), fired (n,), gated (n,)).
 
         With ``adc_bits`` set, the scorer sees the low-precision ADC
         capture of each frame (:func:`adc_view`) — the paper's always-on
         path — while the caller keeps the raw high-precision frames for
-        whatever the gate lets through.
+        whatever the gate lets through. ``labels`` (``(n,)`` ints) feeds
+        ``adapt.mode == "label"`` updates.
         """
         frames = jnp.asarray(frames)
+        if self.adapt is not None and self.adapt.mode == "label":
+            if labels is None:
+                raise ValueError('adapt.mode == "label" needs per-frame '
+                                 "labels passed to process()")
+            labels = jnp.asarray(labels, jnp.int32)
+            if labels.shape != frames.shape[:1]:
+                raise ValueError(f"labels shape {labels.shape} != "
+                                 f"(n,) = {frames.shape[:1]}")
         if self.adc_bits is not None:
             frames = adc_view(frames, self.adc_bits, sigma=self.adc_sigma,
                               key=self._adc_key, start_index=self._n_seen)
         n = frames.shape[0]
         self._n_seen += n
         m = self.model
-        tiles = self._ensure_tiles(frames.shape[-1])
+        if self.backend == "pallas":
+            tiles = (self._ensure_geom(frames.shape[-1])
+                     if self.adapt is not None
+                     else self._ensure_tiles(frames.shape[-1]))
+        else:
+            tiles = None
         scores = np.empty(n, np.float32)
         fired = np.empty(n, bool)
         gated = np.empty(n, bool)
         for start in range(0, n, self.chunk_size):
             chunk = frames[start:start + self.chunk_size]
+            lab = (labels[start:start + self.chunk_size]
+                   if labels is not None
+                   else jnp.zeros(chunk.shape[0], jnp.int32))
             n_valid = chunk.shape[0]
             if n_valid < self.chunk_size:
                 pad = self.chunk_size - n_valid
                 chunk = jnp.pad(chunk, ((0, pad), (0, 0), (0, 0)))
-            s, f, g, hold_out = super_chunk_step(
-                chunk[None], m.class_hvs, m.B0, m.b, tiles,
-                jnp.float32(m.t_score), self._hold[None],
-                jnp.int32(n_valid), h=m.h, w=m.w, stride=m.stride,
+                lab = jnp.pad(lab, (0, pad))
+            s, f, g, new_state = super_chunk_step(
+                chunk[None], self._state, m.B0, m.b, tiles,
+                jnp.float32(m.t_score), jnp.int32(n_valid), lab[None],
+                h=m.h, w=m.w, stride=m.stride,
                 nonlinearity=m.nonlinearity, t_detection=self.t_detection,
-                hold_frames=self.config.hold_frames, backend=self.backend)
-            self._hold = hold_out[0]
+                hold_frames=self.config.hold_frames, backend=self.backend,
+                adapt=self.adapt)
+            if self.adapt is None:
+                # keep the ORIGINAL class-hv ref: values are untouched and
+                # the identity-keyed tile cache must not churn
+                new_state = dataclasses.replace(
+                    new_state, class_hvs=self._state.class_hvs)
+            self._state = new_state
             sl = slice(start, start + n_valid)
             scores[sl] = np.asarray(s)[0, :n_valid]
             fired[sl] = np.asarray(f)[0, :n_valid]
@@ -229,7 +438,8 @@ def simulate_stream_batched(model: HyperSenseModel, frames, labels,
                             block_d: int = 512,
                             adc_bits: int | None = None,
                             adc_sigma: float = 0.0,
-                            adc_key: Array | int = 0) -> StreamStats:
+                            adc_key: Array | int = 0,
+                            adapt: AdaptConfig | None = None) -> StreamStats:
     """Chunked-batched twin of ``sensor_control.simulate_stream``.
 
     Produces identical :class:`StreamStats` to replaying
@@ -237,11 +447,16 @@ def simulate_stream_batched(model: HyperSenseModel, frames, labels,
     but runs ``len(frames)/chunk_size`` jitted steps instead of
     ``len(frames)`` dispatches (one kernel launch per chunk on the
     ``pallas`` backend). ``adc_bits`` puts the simulated low-precision
-    ADC in front of the gate (pass raw frames).
+    ADC in front of the gate (pass raw frames). ``adapt`` switches on
+    online learning — in ``"label"`` mode the ground-truth ``labels``
+    double as the feedback signal.
     """
     runner = StreamRunner(model, config, chunk_size=chunk_size,
                           backend=backend, t_detection=t_detection,
                           block_d=block_d, adc_bits=adc_bits,
-                          adc_sigma=adc_sigma, adc_key=adc_key)
-    _, fired, gated = runner.process(frames)
+                          adc_sigma=adc_sigma, adc_key=adc_key,
+                          adapt=adapt)
+    feed = (labels if adapt is not None and adapt.mode == "label"
+            else None)
+    _, fired, gated = runner.process(frames, labels=feed)
     return stats_from(fired, gated, labels)

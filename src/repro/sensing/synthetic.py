@@ -119,6 +119,45 @@ def make_dataset(key: Array, n_frames: int, cfg: RadarConfig | None = None,
     return frames, masks, labels.astype(jnp.int32)
 
 
+def _event_tracks(key: Array, n_frames: int, cfg: RadarConfig,
+                  event_prob: float, event_len: int, margin_y: int,
+                  margin_x: int) -> tuple[np.ndarray, list]:
+    """Shared event machinery: bursts of ``event_len`` frames on linear
+    tracks. Returns ``(labels (N,), events [(start, len, cy, cx, vy, vx)])``.
+    """
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0,
+                                                       2**31 - 1)))
+    labels = np.zeros(n_frames, dtype=np.int32)
+    i = 0
+    events = []
+    while i < n_frames:
+        if rng.random() < event_prob:
+            length = min(event_len, n_frames - i)
+            labels[i:i + length] = 1
+            events.append((i, length,
+                           rng.uniform(margin_y, cfg.height - margin_y),
+                           rng.uniform(margin_x, cfg.width - margin_x),
+                           rng.uniform(-3, 3), rng.uniform(-3, 3)))
+            i += length
+        else:
+            i += 1
+    return labels, events
+
+
+def _paint_tracks(frames: np.ndarray, events: list, cfg: RadarConfig,
+                  amps: np.ndarray) -> np.ndarray:
+    """Add the tracked object blobs (amplitude per absolute frame index)."""
+    for (start, length, cy, cx, vy, vx) in events:
+        for t in range(length):
+            fy = np.clip(cy + vy * t, 6, cfg.height - 6)
+            fx = np.clip(cx + vx * t, 6, cfg.width - 6)
+            blob = _blob(cfg, jnp.float32(fy), jnp.float32(fx),
+                         jnp.float32(3.0), jnp.float32(3.0),
+                         jnp.float32(amps[start + t]))
+            frames[start + t] += np.asarray(blob)
+    return frames
+
+
 def make_stream(key: Array, n_frames: int, cfg: RadarConfig | None = None,
                 event_prob: float = 0.05, event_len: int = 12
                 ) -> tuple[Array, Array]:
@@ -130,31 +169,92 @@ def make_stream(key: Array, n_frames: int, cfg: RadarConfig | None = None,
     jax-side rendering.
     """
     cfg = cfg or RadarConfig()
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
-    labels = np.zeros(n_frames, dtype=np.int32)
-    i = 0
-    events = []  # (start, cy0, cx0, vy, vx)
-    while i < n_frames:
-        if rng.random() < event_prob:
-            length = min(event_len, n_frames - i)
-            labels[i:i + length] = 1
-            events.append((i, length, rng.uniform(16, cfg.height - 16),
-                           rng.uniform(16, cfg.width - 16),
-                           rng.uniform(-3, 3), rng.uniform(-3, 3)))
-            i += length
-        else:
-            i += 1
-
-    frames = np.zeros((n_frames, cfg.height, cfg.width), np.float32)
+    labels, events = _event_tracks(key, n_frames, cfg, event_prob,
+                                   event_len, 16, 16)
     base_keys = jax.random.split(key, n_frames)
     bg = jax.vmap(lambda k: _speckle(k, cfg))(base_keys)
-    frames[:] = np.asarray(bg)
-    for (start, length, cy, cx, vy, vx) in events:
-        for t in range(length):
-            fy = np.clip(cy + vy * t, 6, cfg.height - 6)
-            fx = np.clip(cx + vx * t, 6, cfg.width - 6)
-            blob = _blob(cfg, jnp.float32(fy), jnp.float32(fx),
-                         jnp.float32(3.0), jnp.float32(3.0),
-                         jnp.float32(0.8))
-            frames[start + t] += np.asarray(blob)
+    frames = np.asarray(bg).copy()
+    frames = _paint_tracks(frames, events, cfg,
+                           np.full(n_frames, 0.8, np.float32))
+    return jnp.clip(jnp.asarray(frames), 0.0, 1.5), jnp.asarray(labels)
+
+
+# ---------------------------------------------------------------------------
+# Distribution drift (online-learning scenarios)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DriftConfig:
+    """Linear distribution drift across a stream (start -> end values).
+
+    The three drifts the always-on sensing literature worries about (and
+    the adaptation benchmark exercises):
+
+    * ``background_gain`` — an additive DC background offset ramping up
+      (e.g. temperature-dependent sensor bias / changing ambient return);
+    * ``noise_sigma`` — the speckle scale drifting (weather, RF
+      interference);
+    * ``object_intensity`` — object blob amplitude drifting (target
+      distance / RCS shift).
+
+    Each is ``(start, end)``, linearly interpolated over the stream.
+    ``None`` spans inherit the un-drifted value (``cfg.noise_sigma``,
+    :func:`make_stream`'s 0.8 blob amplitude), so the default config
+    reproduces :func:`make_stream` statistics for *any* RadarConfig.
+    """
+    background_gain: tuple[float, float] = (0.0, 0.0)
+    noise_sigma: tuple[float, float] | None = None
+    object_intensity: tuple[float, float] | None = None
+
+
+def _speckle_drift(key: Array, cfg: RadarConfig, sigma: Array,
+                   gain: Array) -> Array:
+    """Parametric speckle: traced noise scale + additive background gain."""
+    k1, k2 = jax.random.split(key)
+    re = jax.random.normal(k1, (cfg.height, cfg.width))
+    im = jax.random.normal(k2, (cfg.height, cfg.width))
+    mag = sigma * jnp.sqrt(re * re + im * im)
+    ramp = cfg.range_ramp * (1.0 - jnp.linspace(0, 1, cfg.height))[:, None]
+    return mag + ramp + gain
+
+
+def drift_schedule(n_frames: int, span: tuple[float, float]) -> np.ndarray:
+    """Per-frame linearly interpolated drift values ``(n_frames,)``."""
+    return np.linspace(span[0], span[1], n_frames).astype(np.float32)
+
+
+def make_drift_stream(key: Array, n_frames: int,
+                      cfg: RadarConfig | None = None,
+                      drift: DriftConfig | None = None,
+                      event_prob: float = 0.05, event_len: int = 12
+                      ) -> tuple[Array, Array]:
+    """:func:`make_stream` under distribution drift (adaptation scenario).
+
+    Same event/track structure as :func:`make_stream` (object bursts on
+    linear tracks), but the background gain, speckle sigma, and object
+    intensity follow the linear schedules in ``drift``. A model trained on
+    the early (clean) statistics degrades toward the end of the stream —
+    the regime the online-learning runners are built for.
+
+    Returns ``(frames (N,H,W), labels (N,))``.
+    """
+    cfg = cfg or RadarConfig()
+    drift = drift or DriftConfig()
+    sigma_span = (drift.noise_sigma if drift.noise_sigma is not None
+                  else (cfg.noise_sigma, cfg.noise_sigma))
+    amp_span = (drift.object_intensity
+                if drift.object_intensity is not None else (0.8, 0.8))
+    # track-start margin: make_stream's 16 px, shrunk for small frames
+    labels, events = _event_tracks(key, n_frames, cfg, event_prob,
+                                   event_len, min(16, cfg.height // 3),
+                                   min(16, cfg.width // 3))
+
+    gains = jnp.asarray(drift_schedule(n_frames, drift.background_gain))
+    sigmas = jnp.asarray(drift_schedule(n_frames, sigma_span))
+    amps = drift_schedule(n_frames, amp_span)
+
+    base_keys = jax.random.split(key, n_frames)
+    bg = jax.vmap(lambda k, s, g: _speckle_drift(k, cfg, s, g))(
+        base_keys, sigmas, gains)
+    frames = _paint_tracks(np.asarray(bg).copy(), events, cfg, amps)
     return jnp.clip(jnp.asarray(frames), 0.0, 1.5), jnp.asarray(labels)
