@@ -1,4 +1,5 @@
-.PHONY: test test-multidevice deps bench-stream bench-fleet bench-adapt bench
+.PHONY: test test-shard1 test-shard2 test-cov test-multidevice deps \
+	bench-stream bench-fleet bench-adapt bench-int bench
 
 deps:
 	pip install -r requirements-dev.txt
@@ -7,11 +8,37 @@ deps:
 test:
 	PYTHONPATH=src python -m pytest -x -q
 
+# CI shards: two parallel jobs that together run the full suite.
+# tests/test_ci_shards.py asserts SHARD1 + SHARD2 == every tests/test_*.py,
+# so a new test file that lands in neither shard fails CI.
+SHARD1_FILES = tests/test_kernels.py tests/test_kernels_batch.py \
+	tests/test_kernels_perm.py tests/test_int_datapath.py \
+	tests/test_parity_matrix.py tests/test_stream.py tests/test_fleet.py \
+	tests/test_sensing.py tests/test_adc_quantize.py tests/test_golden.py \
+	tests/test_sharding.py
+SHARD2_FILES = tests/test_arch_smoke.py tests/test_cells.py \
+	tests/test_data_pipeline.py tests/test_gate.py tests/test_hdc_core.py \
+	tests/test_hypersense.py tests/test_online.py tests/test_system.py \
+	tests/test_train_runtime.py tests/test_ci_shards.py
+
+# PYTEST_EXTRA lets CI attach coverage flags (see .github/workflows/ci.yml);
+# plain local runs need no pytest-cov install.
+test-shard1:
+	PYTHONPATH=src python -m pytest -x -q $(PYTEST_EXTRA) $(SHARD1_FILES)
+
+test-shard2:
+	PYTHONPATH=src python -m pytest -x -q $(PYTEST_EXTRA) $(SHARD2_FILES)
+
+# Coverage-gated kernels+sensing run (shard 1 exercises those packages).
+test-cov:
+	$(MAKE) test-shard1 PYTEST_EXTRA="--cov=src/repro/kernels \
+	--cov=src/repro/sensing --cov-report=term --cov-fail-under=70"
+
 # shard_map / sensor-axis sharding against a real 8-device host mesh.
 test-multidevice:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
 	python -m pytest -x -q tests/test_fleet.py tests/test_sharding.py \
-	tests/test_stream.py
+	tests/test_stream.py tests/test_parity_matrix.py
 
 bench-stream:
 	PYTHONPATH=src python benchmarks/stream_throughput.py
@@ -21,6 +48,9 @@ bench-fleet:
 
 bench-adapt:
 	PYTHONPATH=src python benchmarks/adaptation.py
+
+bench-int:
+	PYTHONPATH=src python benchmarks/int_datapath.py
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

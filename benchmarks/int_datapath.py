@@ -1,0 +1,230 @@
+"""Int8 ADC-code datapath: throughput, accuracy parity, determinism.
+
+The three claims behind the low-precision integer datapath (ISSUE 4):
+
+* ``throughput`` — the fused encode->score int kernel
+  (:mod:`repro.kernels.sliding_scores_int`: expanded shifted int8 slabs,
+  rolled-sum reuse, one window matmul per grid step) processes a chunk at
+  least as fast as the float kernel at chunk sizes >= 8. On CPU both run
+  in Pallas interpret mode, so the ratio — not the absolute fps — is the
+  claim; on TPU the int path additionally rides the int8 MXU and 4x
+  smaller operand traffic.
+* ``auc-parity`` — int8 rounding of slabs/class tiles costs essentially
+  no detection quality: frame-score AUC on the synthetic stream AND on a
+  drifted stream is within ``AUC_TOL`` of the float path fed the same
+  ADC capture.
+* ``determinism`` — integer accumulation is associative: the int path is
+  bitwise identical across *separate compilations* of the kernel
+  (``jax.clear_caches()`` between runs, so this is not a cached-executable
+  tautology; cross-process reproducibility follows from the same
+  property).
+
+Run:  PYTHONPATH=src python benchmarks/int_datapath.py [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fragment_model as fm, hypersense, metrics
+from repro.core.encoding import make_perm_base_rows
+from repro.kernels import ops
+from repro.sensing import adc, fragments, synthetic
+
+# CPU-tractable scale (interpret mode); chunk >= 8 is the claimed regime.
+FRAME = 32
+FRAG = 8
+STRIDE = 4
+DIM = 256
+BLOCK_D = 128
+CHUNK = 16
+BITS = 8
+
+# the AUC scenario uses a *trained* gate so scores are meaningful
+AUC_DIM = 512
+N_STREAM = 160
+AUC_TOL = 0.01
+
+
+def _time(fn, reps: int) -> float:
+    fn()  # warmup / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def throughput(n_frames: int = CHUNK, reps: int = 8) -> dict:
+    """Chunk throughput: float kernel vs fused int8 kernel, same model."""
+    B0, b = make_perm_base_rows(jax.random.PRNGKey(0), FRAG, DIM)
+    chvs = jax.random.normal(jax.random.PRNGKey(1), (2, DIM))
+    frames = jax.random.uniform(jax.random.PRNGKey(2),
+                                (n_frames, FRAME, FRAME), maxval=1.5)
+    # both paths see the SAME ADC capture: float gets the reconstruction,
+    # int gets the raw codes
+    codes = adc.pack_codes(adc.quantize_codes(frames, BITS), BITS)
+    recon = adc.quantize(frames, BITS)
+    ftiles = ops.precompute_tiles(B0, b, chvs, W=FRAME, w=FRAG,
+                                  stride=STRIDE, block_d=BLOCK_D)
+    itiles = ops.precompute_tiles_int(B0, b, chvs, W=FRAME, w=FRAG,
+                                      stride=STRIDE, block_d=BLOCK_D)
+
+    t_f = _time(lambda: jax.block_until_ready(
+        ops.fragment_score_map_batch(recon, chvs, B0, b, h=FRAG, w=FRAG,
+                                     stride=STRIDE, tiles=ftiles)), reps)
+    t_i = _time(lambda: jax.block_until_ready(
+        ops.fragment_score_map_batch_int(codes, chvs, B0, b, h=FRAG,
+                                         w=FRAG, stride=STRIDE,
+                                         tiles=itiles)), reps)
+    return {"float_fps": n_frames / t_f, "int8_fps": n_frames / t_i,
+            "speedup": t_f / t_i, "chunk": n_frames}
+
+
+def _train_gate(cfg, dim: int):
+    """Fragment model trained on the clean distribution (as adaptation.py)."""
+    frames, masks, _ = synthetic.make_dataset(jax.random.PRNGKey(0), 60,
+                                              cfg)
+    frs, labs = fragments.sample_fragments(
+        np.asarray(frames), np.asarray(masks), h=FRAG, w=FRAG,
+        per_frame=2, seed=0)
+    model, _ = fm.train_fragment_model(
+        jax.random.PRNGKey(1), jnp.asarray(frs), jnp.asarray(labs),
+        dim=dim, epochs=8)
+    B0 = model.B.reshape(FRAG, FRAG, -1)[:, 0, :]
+    return hypersense.from_fragment_model(model, B0, h=FRAG, w=FRAG,
+                                          stride=STRIDE, t_detection=1)
+
+
+def _auc(scores, labels) -> float:
+    fpr, tpr, _ = metrics.roc_curve(np.asarray(scores), np.asarray(labels))
+    return float(metrics.auc(fpr, tpr))
+
+
+def auc_parity(backend: str = "pallas") -> dict:
+    """Frame-score AUC, float vs int8 datapath, synthetic + drift."""
+    cfg = synthetic.RadarConfig(height=FRAME, width=FRAME)
+    hs = _train_gate(cfg, AUC_DIM)
+    drift = synthetic.DriftConfig(background_gain=(0.0, 0.5),
+                                  noise_sigma=(0.12, 0.25),
+                                  object_intensity=(0.8, 0.45))
+    scenarios = {
+        "synthetic": synthetic.make_stream(
+            jax.random.PRNGKey(3), N_STREAM, cfg, event_prob=0.08,
+            event_len=10),
+        "drift": synthetic.make_drift_stream(
+            jax.random.PRNGKey(4), N_STREAM, cfg, drift, event_prob=0.08,
+            event_len=10),
+    }
+    out = {"backend": backend}
+    for name, (frames, labels) in scenarios.items():
+        recon = adc.quantize(frames, BITS)
+        s_f = hypersense.frame_scores_batch(hs, recon, backend=backend)
+        s_i = hypersense.frame_scores_batch(hs, frames, backend=backend,
+                                            precision="int8",
+                                            adc_bits=BITS)
+        out[f"{name}_float_auc"] = _auc(s_f, labels)
+        out[f"{name}_int8_auc"] = _auc(s_i, labels)
+        out[f"{name}_gap"] = abs(out[f"{name}_float_auc"]
+                                 - out[f"{name}_int8_auc"])
+    return out
+
+
+def determinism() -> dict:
+    """Int-path runs must be bitwise identical across fresh compilations.
+
+    ``jax.clear_caches()`` between the two runs discards the compiled
+    executable, so the comparison spans two independent compiles — a
+    scheduling- or layout-dependent reduction would be free to differ.
+    """
+    B0, b = make_perm_base_rows(jax.random.PRNGKey(7), FRAG, DIM)
+    chvs = jax.random.normal(jax.random.PRNGKey(8), (2, DIM))
+    frames = jax.random.uniform(jax.random.PRNGKey(9),
+                                (CHUNK, FRAME, FRAME), maxval=1.5)
+    codes = adc.pack_codes(adc.quantize_codes(frames, BITS), BITS)
+    itiles = ops.precompute_tiles_int(B0, b, chvs, W=FRAME, w=FRAG,
+                                      stride=STRIDE, block_d=BLOCK_D)
+    a = np.asarray(ops.fragment_score_map_batch_int(
+        codes, chvs, B0, b, h=FRAG, w=FRAG, stride=STRIDE, tiles=itiles))
+    jax.clear_caches()
+    b_ = np.asarray(ops.fragment_score_map_batch_int(
+        codes, chvs, B0, b, h=FRAG, w=FRAG, stride=STRIDE, tiles=itiles))
+    return {"bitwise_equal": bool((a == b_).all())}
+
+
+def run(n_frames: int = CHUNK, reps: int = 8,
+        backend: str = "pallas") -> list[dict]:
+    """Benchmark-driver entry point (``python -m benchmarks.run``)."""
+    t = throughput(n_frames, reps)
+    a = auc_parity(backend)
+    d = determinism()
+    return [
+        {"name": "int_datapath/throughput",
+         "float_fps": f"{t['float_fps']:.1f}",
+         "int8_fps": f"{t['int8_fps']:.1f}",
+         "speedup": f"{t['speedup']:.2f}x",
+         "chunk": t["chunk"]},
+        {"name": "int_datapath/auc",
+         "synthetic_float": f"{a['synthetic_float_auc']:.4f}",
+         "synthetic_int8": f"{a['synthetic_int8_auc']:.4f}",
+         "synthetic_gap": f"{a['synthetic_gap']:.4f}",
+         "drift_float": f"{a['drift_float_auc']:.4f}",
+         "drift_int8": f"{a['drift_int8_auc']:.4f}",
+         "drift_gap": f"{a['drift_gap']:.4f}",
+         "backend": a["backend"]},
+        {"name": "int_datapath/determinism",
+         "bitwise_equal": d["bitwise_equal"]},
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=CHUNK,
+                    help="chunk size (>= 8 is the claimed regime)")
+    ap.add_argument("--reps", type=int, default=8)
+    ap.add_argument("--backend", default="pallas",
+                    choices=["jnp", "pallas"],
+                    help="backend for the AUC scenarios")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless int8 fps >= float fps at "
+                         f"chunk >= 8, AUC gap <= {AUC_TOL} on both "
+                         "scenarios, and the int path is bitwise "
+                         "deterministic")
+    args = ap.parse_args()
+
+    rows = run(args.frames, args.reps, args.backend)
+    vals = {}
+    for row in rows:
+        name = row.pop("name")
+        vals[name] = dict(row)
+        print(name + "," + ",".join(f"{k}={v}" for k, v in row.items()))
+
+    if args.check:
+        t = vals["int_datapath/throughput"]
+        a = vals["int_datapath/auc"]
+        d = vals["int_datapath/determinism"]
+        if float(t["int8_fps"]) < float(t["float_fps"]):
+            raise SystemExit(
+                f"REGRESSION: int8 path {t['int8_fps']} fps < float path "
+                f"{t['float_fps']} fps at chunk {t['chunk']}")
+        for scen in ("synthetic", "drift"):
+            if float(a[f"{scen}_gap"]) > AUC_TOL:
+                raise SystemExit(
+                    f"REGRESSION: int8 AUC gap {a[f'{scen}_gap']} > "
+                    f"{AUC_TOL} on the {scen} scenario "
+                    f"(float {a[f'{scen}_float']}, int8 "
+                    f"{a[f'{scen}_int8']})")
+        if d["bitwise_equal"] is not True and d["bitwise_equal"] != "True":
+            raise SystemExit("REGRESSION: int path not bitwise "
+                             "deterministic across runs")
+        print("int_datapath/check,ok=True")
+
+
+if __name__ == "__main__":
+    main()

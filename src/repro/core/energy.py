@@ -38,6 +38,13 @@ class EnergyParams:
     adc_lp_bits: int = 4             # low-precision ADC bit depth
     adc_hp_bits: int = 12            # high-precision ADC bit depth
     hdc_accel_j: float = 0.027       # 8.2 W / 303 fps  (paper Table II/V-D)
+    #: relative energy of the int8 datapath's near-sensor HDC work vs the
+    #: float32 path. int8 MAC switching energy is ~0.15-0.3x fp32
+    #: (Horowitz, ISSCC'14: 8b add 0.03 pJ vs fp32 add 0.9 pJ; 8b mult
+    #: 0.2 pJ vs fp32 mult 3.7 pJ) and operand memory traffic is 4x
+    #: smaller; 0.35 is a conservative blended factor in line with the
+    #: SCM always-on accelerator's low-bitwidth datapath [Eggimann 2021].
+    hdc_int8_factor: float = 0.35
     frame_bits: float = 128 * 128 * 8
     comm_j_per_mbit: float = 2.5     # 3G radio
     cloud_j: float = 6.0             # server inference + network + PUE
@@ -89,26 +96,38 @@ def duty_cycle(fpr: float, tpr: float, p_object: float) -> float:
 
 
 def hypersense_measured(duty: float,
-                        params: EnergyParams = EnergyParams()
-                        ) -> EnergyBreakdown:
+                        params: EnergyParams = EnergyParams(),
+                        precision: str = "float32") -> EnergyBreakdown:
     """Per-frame energy at a *measured* duty cycle (e.g. from StreamStats).
 
     The analytic :func:`hypersense` predicts the duty cycle from an ROC
     operating point; this variant takes the duty cycle a stream driver
     actually observed — the form the fleet runtime aggregates over sensors.
+
+    ``precision="int8"`` bills the always-on near-sensor HDC work at the
+    integer datapath's reduced switching/memory cost
+    (``hdc_int8_factor``); the gated high-precision side is unchanged —
+    the gate's *decisions*, not its arithmetic, control that.
     """
+    hdc = params.hdc_accel_j
+    if precision == "int8":
+        hdc *= params.hdc_int8_factor
+    elif precision != "float32":
+        raise ValueError(f"unknown datapath precision {precision!r}")
     return EnergyBreakdown(
         sensor=params.rf_frontend_j,
         adc=params.adc_lp_j + duty * params.adc_hp_j,
-        hdc=params.hdc_accel_j,
+        hdc=hdc,
         comm=duty * params.comm_j,
         cloud=duty * params.cloud_j,
     )
 
 
 def hypersense(fpr: float, tpr: float, p_object: float = 0.01,
-               params: EnergyParams = EnergyParams()) -> EnergyBreakdown:
-    return hypersense_measured(duty_cycle(fpr, tpr, p_object), params)
+               params: EnergyParams = EnergyParams(),
+               precision: str = "float32") -> EnergyBreakdown:
+    return hypersense_measured(duty_cycle(fpr, tpr, p_object), params,
+                               precision)
 
 
 def savings(ours: EnergyBreakdown, base: EnergyBreakdown) -> dict:

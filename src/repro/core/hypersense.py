@@ -140,7 +140,9 @@ def frame_scores_batch(model: HyperSenseModel, frames: Array,
                        t_detection: int | None = None, *,
                        backend: str = "jnp",
                        sequential: bool = False,
-                       tiles=None) -> Array:
+                       tiles=None,
+                       precision: str = "float32",
+                       adc_bits: int = 8) -> Array:
     """Frame-level ROC scores for a batch of frames -> ``(N,)`` float.
 
     ``backend='pallas'`` (non-sequential) scores the whole batch in ONE
@@ -150,8 +152,56 @@ def frame_scores_batch(model: HyperSenseModel, frames: Array,
     calls). ``sequential=True`` scores frames one jit call at a time — use
     for large D / many frames on the jnp path, where the vmapped
     rolled-product intermediate (N x H x W x D) would blow host memory.
+
+    ``precision="int8"`` runs the low-precision integer datapath
+    (:mod:`repro.kernels.sliding_scores_int`): ``frames`` may be raw
+    integer ADC codes (consumed untouched) or floats (quantized to
+    ``adc_bits`` codes first — the simulated converter). ``tiles`` must
+    then come from :func:`repro.kernels.ops.precompute_tiles_int`. Scores
+    stay on the float path's scale (the ADC LSB cancels in the window
+    normalization), so ``t_score``/ROC sweeps transfer unchanged.
     """
     td = model.t_detection if t_detection is None else t_detection
+
+    if precision == "int8":
+        from repro.kernels import ops as kops
+        from repro.kernels import sliding_scores_int as ssi
+        from repro.sensing import adc as adc_sim
+
+        if jnp.issubdtype(frames.dtype, jnp.integer):
+            # pre-converted codes must actually fit adc_bits, or the
+            # overflow bounds below are checked at the wrong depth
+            adc_sim.check_codes_range(frames, adc_bits)
+            codes = frames
+        else:
+            codes = adc_sim.pack_codes(
+                adc_sim.quantize_codes(frames, adc_bits), adc_bits)
+        kops.assert_int_datapath_fits(adc_bits, *codes.shape[-2:],
+                                      model.h, model.w)
+        if tiles is None:
+            tiles = kops.precompute_tiles_int(
+                model.B0, model.b, model.class_hvs, W=codes.shape[-1],
+                w=model.w, stride=model.stride)
+
+        def score_maps(c):
+            if backend == "pallas":
+                return kops.fragment_score_map_batch_int(
+                    c, model.class_hvs, model.B0, model.b, h=model.h,
+                    w=model.w, stride=model.stride,
+                    nonlinearity=model.nonlinearity, tiles=tiles)
+            return ssi.fragment_scores_batch_int_ref(
+                c, tiles, h=model.h, w=model.w, stride=model.stride,
+                nonlinearity=model.nonlinearity)
+
+        if sequential:
+            # one frame per (jitted) call: the same memory escape hatch
+            # the float path documents — the jnp oracle materializes
+            # (N, my, mx, D) projections, which this caps at N = 1
+            return jnp.stack([
+                frame_detection_score(score_maps(codes[i:i + 1])[0], td)
+                for i in range(codes.shape[0])])
+        maps = score_maps(codes)
+        return jax.vmap(lambda m: frame_detection_score(m, td))(maps)
 
     if backend == "pallas" and not sequential:
         from repro.kernels import ops as kops

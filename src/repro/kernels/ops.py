@@ -14,6 +14,7 @@ from repro.core.encoding import NonLin
 from repro.kernels import hdc_encode as _enc
 from repro.kernels import similarity as _sim
 from repro.kernels import sliding_scores as _ss
+from repro.kernels import sliding_scores_int as _ssi
 
 Array = jax.Array
 
@@ -49,6 +50,16 @@ retile_classes = _ss.retile_classes
 retile_classes_fleet = _ss.retile_classes_fleet
 ScoreTiles = _ss.ScoreTiles
 ScoreGeometry = _ss.ScoreGeometry
+
+# int8 datapath twins (repro.kernels.sliding_scores_int)
+precompute_tiles_int = _ssi.precompute_tiles_int
+precompute_geometry_int = _ssi.precompute_geometry_int
+retile_classes_int = _ssi.retile_classes_int
+retile_classes_int_fleet = _ssi.retile_classes_int_fleet
+IntScoreTiles = _ssi.IntScoreTiles
+IntScoreGeometry = _ssi.IntScoreGeometry
+assert_int_datapath_fits = _ssi.assert_int_datapath_fits
+int_datapath_bounds = _ssi.int_datapath_bounds
 
 
 def fragment_score_map(frame: Array, class_hvs: Array, B0: Array, b: Array,
@@ -89,6 +100,53 @@ def fragment_score_map_batch(frames: Array, class_hvs: Array, B0: Array,
     return _ss.fragment_scores_batch(frames, tiles, h=h, w=w, stride=stride,
                                      nonlinearity=nonlinearity,
                                      interpret=_interpret())
+
+
+def fragment_score_map_batch_int(codes: Array, class_hvs: Array, B0: Array,
+                                 b: Array, *, h: int, w: int, stride: int,
+                                 nonlinearity: NonLin = "rff",
+                                 tiles: _ssi.IntScoreTiles | None = None,
+                                 block_d: int = 512) -> Array:
+    """(N, H, W) integer ADC codes -> (N, my, mx) score maps, ONE launch.
+
+    The int8 datapath's streaming hot path: raw codes flow into the fused
+    encode->score kernel untouched (int32 accumulation, float only at the
+    similarity epilogue). Pass ``tiles`` from :func:`precompute_tiles_int`
+    to amortize the quantized precompute across chunks.
+    """
+    W = codes.shape[-1]
+    if tiles is None:
+        tiles = _ssi.precompute_tiles_int(B0, b, class_hvs, W=W, w=w,
+                                          stride=stride, block_d=block_d)
+    return _ssi.fragment_scores_batch_int(codes, tiles, h=h, w=w,
+                                          stride=stride,
+                                          nonlinearity=nonlinearity,
+                                          interpret=_interpret())
+
+
+def fragment_score_map_fleet_int(codes: Array, class_hvs: Array, B0: Array,
+                                 b: Array, *, h: int, w: int, stride: int,
+                                 nonlinearity: NonLin = "rff",
+                                 tiles: _ssi.IntScoreTiles | None = None,
+                                 block_d: int = 512) -> Array:
+    """(S, C, H, W) code super-chunk -> (S, C, my, mx), ONE launch.
+
+    Int twin of :func:`fragment_score_map_fleet`: per-stream int8 class
+    tiles (``tiles.cpos_t.ndim == 4``) ride the stream-indexed BlockSpecs
+    of the shared grid.
+    """
+    S, C, H, W = codes.shape
+    if tiles is not None and tiles.cpos_t.ndim == 4:
+        maps = _ssi.fragment_scores_batch_int(
+            codes.reshape(S * C, H, W), tiles, h=h, w=w, stride=stride,
+            nonlinearity=nonlinearity, interpret=_interpret(),
+            frames_per_stream=C)
+    else:
+        maps = fragment_score_map_batch_int(
+            codes.reshape(S * C, H, W), class_hvs, B0, b, h=h, w=w,
+            stride=stride, nonlinearity=nonlinearity, tiles=tiles,
+            block_d=block_d)
+    return maps.reshape(S, C, *maps.shape[1:])
 
 
 def fragment_score_map_fleet(frames: Array, class_hvs: Array, B0: Array,

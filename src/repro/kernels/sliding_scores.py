@@ -70,7 +70,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.encoding import SHIFT, NonLin
+from repro.core.encoding import SHIFT, NonLin, apply_nonlinearity
 from repro.kernels.compat import CompilerParams
 
 Array = jax.Array
@@ -279,15 +279,12 @@ def _score_kernel(frame_ref, slab_ref, bias_ref, cpos_ref, cneg_ref,
     jax.lax.fori_loop(0, h, row_body, 0)
 
     # normalization + nonlinearity + classifier dots (unrolled orientation)
+    # — the nonlinearity is the ONE definition in repro.core.encoding,
+    # shared with the int kernel and both jnp oracles (identical
+    # expression, so this path stays bitwise-frozen)
     norms = norm_ref[0].astype(jnp.float32)                  # (1, mx)
     s_n = acc_ref[...] / jnp.maximum(norms[0][:, None], 1e-8)
-    bias = bias_ref[0]                                       # (mx, TD)
-    if nonlinearity == "rff":
-        phi = jnp.cos(s_n + bias) * jnp.sin(s_n)
-    elif nonlinearity == "sign":
-        phi = jnp.sign(s_n)
-    else:
-        phi = s_n
+    phi = apply_nonlinearity(s_n, bias_ref[0], nonlinearity)
     dpos = jnp.sum(phi * cpos_ref[0], axis=1)[None, None, :]  # (1, 1, mx)
     dneg = jnp.sum(phi * cneg_ref[0], axis=1)[None, None, :]
     qq = jnp.sum(phi * phi, axis=1)[None, None, :]

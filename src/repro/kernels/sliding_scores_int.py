@@ -1,0 +1,509 @@
+"""Pallas TPU kernel: low-precision integer HyperSense frame scoring.
+
+The float path (:mod:`repro.kernels.sliding_scores`) consumes the ADC's
+*reconstruction* ``codes * LSB`` — every kernel still does float32 work, so
+the "energy-efficient low-precision ADC" of the paper buys nothing past the
+converter. This module is the paper's actual FPGA datapath (§IV) brought to
+the kernel level, following the SCM always-on HDC accelerator (Eggimann et
+al., 2021) and the low-bitwidth hypervector-design line (Basaklar et al.,
+2021): the raw integer **ADC codes** flow into the scoring kernel untouched,
+every fragment projection accumulates in **int32**, and floats appear only
+in the tiny similarity/normalization epilogue.
+
+Why the integer path is *structurally* different (not just a dtype swap):
+
+* **Expanded shifted slabs + vectorized prefix reuse.** The float kernel
+  walks each frame row with an ``O(h*(W+mx))``-step scalar prefix-sum loop
+  (the systolic FIFO in loop form). The int kernel *pre-expands* all ``W``
+  cyclic shifts of every base row into one ``(h*W, TD)`` operand —
+  affordable **because it is int8**: the expansion is 4x smaller than
+  float32 and fits VMEM at deployment scale (h=16, W=128, TD=512 -> 1 MB
+  int8/tile). The per-grid-step projection then keeps the paper's
+  computation reuse with zero scalar loops: ``h`` wide elementwise
+  products against the pre-shifted slabs fold into the per-column rolled
+  sums ``G (W, TD)`` (each code multiplied once per base row — the reused
+  product), and the fragment windows fall out of ONE small integer matmul
+  ``win_mask (mx, W) @ G`` — MXU-shaped on TPU, vectorized in interpret
+  mode. Same multiply count as the float kernel, none of its
+  ``h*(W+mx)`` sequential loop steps — that is where the measured
+  ``benchmarks/int_datapath.py`` throughput win comes from.
+* **LSB cancellation.** The fragment projection is normalized by the
+  window's L2 norm, so the ADC step size cancels:
+  ``(LSB * acc) / (LSB * ||codes||) = acc / ||codes||``. Scores from the
+  int path live on the same scale as the float path — ``t_score``
+  thresholds and ROC sweeps transfer unchanged.
+* **Scale cancellation in the cosine epilogue.** Class hypervectors are
+  stored as int8 with a per-class scale; because the final score is a
+  *cosine*, the class scale cancels against the class norm — the epilogue
+  only ever needs the L2 norm of the *quantized* class vector. The only
+  approximation the int path introduces is int8 rounding of the slabs and
+  class tiles (AUC gap bounded in the benchmark ``--check``).
+
+Accumulator discipline (all bounds checked by
+:func:`assert_int_datapath_fits` + hypothesis property tests):
+
+* window sum-of-squares: exact int32 summed-area table of ``codes**2``
+  (``<= H*W*(2^bits-1)^2``) — the float SAT would lose exactness past
+  2^24;
+* fragment projection prefix sum: ``<= h*W*(2^bits-1)*127`` per entry —
+  int32 with orders of magnitude of headroom at 8-bit codes and paper
+  frame/window sizes.
+
+Integer accumulation is associative, so the int path is **bitwise
+deterministic across runs** regardless of scheduling — asserted in CI.
+
+Precompute mirrors the float path's mutability split: class-independent
+:class:`IntScoreGeometry` (quantized expanded slabs, window mask, rotation
+gather) vs the jitted device-side :func:`retile_classes_int` /
+:func:`retile_classes_int_fleet` (classifier install = gather + int8
+quantize per class), so online adaptation never re-runs the host
+precompute mid-stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.encoding import NonLin, apply_nonlinearity
+from repro.kernels import sliding_scores as _ss
+from repro.kernels.compat import CompilerParams
+
+Array = jax.Array
+
+INT32_MAX = 2**31 - 1
+
+#: int8 symmetric quantization range (saturating at +-127 keeps the
+#: representation sign-symmetric; -128 is never produced)
+_QMAX = 127
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IntScoreGeometry:
+    """Class-independent int-kernel precompute (see module docstring).
+
+    ``slab_mat`` is the *expanded shifted slab*:
+    ``slab_mat[dt, r*W + i, j] = q(slabs[dt, r, i + j])`` — all ``W``
+    cyclic shifts of every base row, int8-quantized with the shared
+    ``slab_scale``. Multiplying frame row ``r``'s code ``i`` against
+    ``slab_mat[dt, r*W + i, :]`` is the paper's reused rolled product;
+    ``win_mask[kx, i] = [kx*stride <= i < kx*stride + w]`` aggregates the
+    rolled sums into fragment windows as one small matmul.
+    """
+    slab_mat: Array    # (n_dt, h*W, TD) int8 expanded shifted slabs
+    win_mask: Array    # (mx, W) int8 window-membership indicator
+    bias_t: Array      # (n_dt, mx, TD) f32 pre-rotated RFF bias tiles
+    idx: Array         # (n_dt, mx, TD) i32 rotation gather into a (D,) vec
+    slab_scale: Array  # () f32: slab ~= slab_mat * slab_scale
+    block_d: int = dataclasses.field(metadata={"static": True})
+    w: int = dataclasses.field(metadata={"static": True})
+    stride: int = dataclasses.field(metadata={"static": True})
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IntScoreTiles:
+    """Geometry + int8 class tiles: the int kernel's full input bundle.
+
+    ``cpos_t``/``cneg_t`` are ``(n_dt, mx, TD)`` int8 for a shared
+    classifier or ``(S, n_dt, mx, TD)`` (with ``(S,)`` norms) per-stream.
+    ``c*_norm`` is the L2 norm of the *quantized* class vector — the
+    per-class quantization scale cancels in the cosine epilogue, so it is
+    never stored.
+    """
+    geom: IntScoreGeometry
+    cpos_t: Array     # ([S,] n_dt, mx, TD) int8 positive class tiles
+    cneg_t: Array     # ([S,] n_dt, mx, TD) int8 negative class tiles
+    cpos_norm: Array  # ([S]) f32 L2 of the quantized positive class vector
+    cneg_norm: Array  # ([S]) f32 L2 of the quantized negative class vector
+
+
+# ---------------------------------------------------------------------------
+# Accumulator bounds: the no-overflow contract of the int32 datapath
+# ---------------------------------------------------------------------------
+
+def int_datapath_bounds(adc_bits: int, H: int, W: int, h: int, w: int
+                        ) -> dict:
+    """Worst-case int32 accumulator magnitudes of the integer datapath.
+
+    * ``sumsq`` — the summed-area table of squared codes over a full
+      frame (the window-norm pass);
+    * ``acc``  — one fragment projection: ``h*w`` products of a max code
+      with a max int8 slab entry.
+
+    Both must stay below ``INT32_MAX`` for the path to be exact.
+    """
+    cmax = (1 << adc_bits) - 1
+    sumsq = H * W * cmax * cmax
+    acc = h * w * cmax * _QMAX
+    return {"sumsq": sumsq, "acc": acc, "int32_max": INT32_MAX,
+            "fits": max(sumsq, acc) <= INT32_MAX}
+
+
+def assert_int_datapath_fits(adc_bits: int, H: int, W: int, h: int,
+                             w: int) -> None:
+    """Raise unless every int32 accumulator of the datapath has headroom."""
+    b = int_datapath_bounds(adc_bits, H, W, h, w)
+    if not b["fits"]:
+        raise ValueError(
+            f"int8 datapath would overflow int32 at adc_bits={adc_bits}, "
+            f"frame {H}x{W}, window {h}x{w}: worst-case accumulators "
+            f"sumsq={b['sumsq']}, acc={b['acc']} exceed {INT32_MAX}; "
+            f"use fewer ADC bits / smaller frames or precision='float32'")
+
+
+# ---------------------------------------------------------------------------
+# Precompute: geometry (host, per model-geometry) + class tiles (device)
+# ---------------------------------------------------------------------------
+
+def _quantize_sym(x: Array, scale: Array) -> Array:
+    """Symmetric int8 quantization at a given positive scale."""
+    return jnp.clip(jnp.round(x / scale), -_QMAX, _QMAX).astype(jnp.int8)
+
+
+def precompute_geometry_int(B0: Array, b: Array, *, W: int, w: int,
+                            stride: int, block_d: int = 512
+                            ) -> IntScoreGeometry:
+    """Host-side, once per (model-geometry, frame-width).
+
+    Builds on the float :func:`~repro.kernels.sliding_scores.
+    precompute_geometry` (same slab/bias/rotation content), then expands
+    the ``W`` shifts of every slab row into the int8 matmul operand.
+    """
+    geom = _ss.precompute_geometry(B0, b, W=W, w=w, stride=stride,
+                                   block_d=block_d)
+    n_dt, h, _ = geom.slabs.shape
+    td = geom.block_d
+
+    # slab_mat[dt, r*W + i, j] = slabs[dt, r, i + j]
+    shift_idx = jnp.arange(W)[:, None] + jnp.arange(td)[None, :]  # (W, TD)
+    expanded = geom.slabs[:, :, shift_idx]            # (n_dt, h, W, TD)
+    scale = jnp.maximum(jnp.max(jnp.abs(geom.slabs)), 1e-12) / _QMAX
+    slab_mat = _quantize_sym(expanded, scale).reshape(n_dt, h * W, td)
+
+    # win_mask[kx, i] = [kx*stride <= i < kx*stride + w]
+    mx = (W - w) // stride + 1
+    i = jnp.arange(W)[None, :]
+    kx = jnp.arange(mx)[:, None] * stride
+    win_mask = ((i >= kx) & (i < kx + w)).astype(jnp.int8)  # (mx, W)
+
+    return IntScoreGeometry(slab_mat=slab_mat, win_mask=win_mask,
+                            bias_t=geom.bias_t, idx=geom.idx,
+                            slab_scale=scale.astype(jnp.float32),
+                            block_d=td, w=w, stride=stride)
+
+
+def _quantize_class(c: Array) -> tuple[Array, Array]:
+    """Per-class int8 quantization: ``(codes (D,) int8, ||codes||_2 f32)``.
+
+    The scale is *not* returned — it cancels in the cosine epilogue.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(c)), 1e-12) / _QMAX
+    q = _quantize_sym(c, scale)
+    return q, jnp.linalg.norm(q.astype(jnp.float32))
+
+
+@jax.jit
+def retile_classes_int(geom: IntScoreGeometry, class_hvs: Array
+                       ) -> IntScoreTiles:
+    """Device-side classifier (re-)tiling: ``(2, D)`` -> int8 tiles.
+
+    One gather + int8 quantize per class — the entire cost of installing
+    an updated classifier into the int scoring kernel (the online-learning
+    hot path never re-runs :func:`precompute_geometry_int`).
+    """
+    qpos, npos = _quantize_class(class_hvs[1].astype(jnp.float32))
+    qneg, nneg = _quantize_class(class_hvs[0].astype(jnp.float32))
+    return IntScoreTiles(geom=geom, cpos_t=qpos[geom.idx],
+                         cneg_t=qneg[geom.idx],
+                         cpos_norm=npos, cneg_norm=nneg)
+
+
+@jax.jit
+def retile_classes_int_fleet(geom: IntScoreGeometry, class_hvs: Array
+                             ) -> IntScoreTiles:
+    """Per-stream classifier tiling: ``(S, 2, D)`` -> stacked int8 tiles."""
+    def one(chvs):
+        qpos, npos = _quantize_class(chvs[1].astype(jnp.float32))
+        qneg, nneg = _quantize_class(chvs[0].astype(jnp.float32))
+        return qpos[geom.idx], qneg[geom.idx], npos, nneg
+
+    cpos_t, cneg_t, npos, nneg = jax.vmap(one)(class_hvs)
+    return IntScoreTiles(geom=geom, cpos_t=cpos_t, cneg_t=cneg_t,
+                         cpos_norm=npos, cneg_norm=nneg)
+
+
+def precompute_tiles_int(B0: Array, b: Array, class_hvs: Array, *, W: int,
+                         w: int, stride: int, block_d: int = 512
+                         ) -> IntScoreTiles:
+    """Host-side all-in-one: geometry + int8 class tiles."""
+    geom = precompute_geometry_int(B0, b, W=W, w=w, stride=stride,
+                                   block_d=block_d)
+    return retile_classes_int(geom, class_hvs)
+
+
+# ---------------------------------------------------------------------------
+# Window norms from raw codes (exact int32 summed-area table)
+# ---------------------------------------------------------------------------
+
+def window_sumsq_codes(codes: Array, h: int, w: int, stride: int) -> Array:
+    """(my, mx) *exact* int32 sliding-window sums of squared ADC codes."""
+    H, W = codes.shape
+    my = (H - h) // stride + 1
+    mx = (W - w) // stride + 1
+    c = codes.astype(jnp.int32)
+    sq = jnp.cumsum(jnp.cumsum(c * c, axis=0), axis=1)
+    sq = jnp.pad(sq, ((1, 0), (1, 0)))
+    ky = jnp.arange(my) * stride
+    kx = jnp.arange(mx) * stride
+    return (sq[ky[:, None] + h, kx[None, :] + w]
+            - sq[ky[:, None] + h, kx[None, :]]
+            - sq[ky[:, None], kx[None, :] + w]
+            + sq[ky[:, None], kx[None, :]])
+
+
+def window_norms_codes_batch(codes: Array, h: int, w: int,
+                             stride: int) -> Array:
+    """(N, my, mx) L2 norms of sliding code windows (float only at sqrt)."""
+    ss = jax.vmap(lambda c: window_sumsq_codes(c, h, w, stride))(codes)
+    return jnp.sqrt(ss.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# The kernel
+# ---------------------------------------------------------------------------
+
+def _int_window_acc(block, slab_mat, win_mask, *, h: int, W: int,
+                    td: int) -> Array:
+    """Shared int32 projection core: ``(h, W) codes -> (mx, TD)`` sums.
+
+    The paper's computation reuse with zero scalar loops: the ``h``
+    elementwise rolled products against the pre-shifted int8 slabs fold
+    into the per-column rolled sums ``G (W, TD)`` — each code multiplied
+    once per base row, never materializing ``(h, W, TD)`` — then ONE
+    small integer matmul against the window indicator aggregates every
+    fragment. Exact int32 arithmetic throughout.
+    """
+    slab3 = slab_mat.reshape(h, W, td)                    # int8 (lazy)
+    codes = block.astype(jnp.int32)
+    g = codes[0][:, None] * slab3[0]                      # (W, TD) int32
+    for r in range(1, h):
+        g = g + codes[r][:, None] * slab3[r]
+    return jax.lax.dot_general(
+        win_mask.astype(jnp.int32), g, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)                 # (mx, TD)
+
+
+def _score_kernel_int(codes_ref, slab_ref, mask_ref, bias_ref, cpos_ref,
+                      cneg_ref, norm_ref, dpos_ref, dneg_ref, qq_ref, *,
+                      h: int, stride: int, w: int, W: int, mx: int,
+                      td: int, nonlinearity: NonLin):
+    ky = pl.program_id(1)
+    block = codes_ref[0, pl.ds(ky * stride, h), :]        # (h, W) codes
+    acc = _int_window_acc(block, slab_ref[0], mask_ref[...],
+                          h=h, W=W, td=td)                # (mx, TD) int32
+
+    # float epilogue: normalization (slab scale folded into norm_ref by the
+    # caller), nonlinearity, classifier dots (class scale cancels in cosine)
+    # the ONE nonlinearity definition (repro.core.encoding), shared with
+    # the float kernel and the jnp oracle — plain jnp ops, pallas-safe
+    norms = norm_ref[0].astype(jnp.float32)               # (1, mx)
+    s_n = acc.astype(jnp.float32) / norms[0][:, None]
+    phi = apply_nonlinearity(s_n, bias_ref[0], nonlinearity)  # (mx, TD)
+    dpos = jnp.sum(phi * cpos_ref[0].astype(jnp.float32),
+                   axis=1)[None, None, :]                 # (1, 1, mx)
+    dneg = jnp.sum(phi * cneg_ref[0].astype(jnp.float32),
+                   axis=1)[None, None, :]
+    qq = jnp.sum(phi * phi, axis=1)[None, None, :]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        dpos_ref[...] = jnp.zeros_like(dpos_ref)
+        dneg_ref[...] = jnp.zeros_like(dneg_ref)
+        qq_ref[...] = jnp.zeros_like(qq_ref)
+
+    dpos_ref[...] += dpos
+    dneg_ref[...] += dneg
+    qq_ref[...] += qq
+
+
+def _cosine_epilogue(dpos, dneg, qq, tiles, per_stream: bool, C: int):
+    qn = jnp.maximum(jnp.sqrt(qq), 1e-9)
+    if per_stream:
+        rep = lambda v: jnp.repeat(v, C)[:, None, None]   # (N, 1, 1)
+        return (dpos / (qn * jnp.maximum(rep(tiles.cpos_norm), 1e-9))
+                - dneg / (qn * jnp.maximum(rep(tiles.cneg_norm), 1e-9)))
+    return (dpos / (qn * jnp.maximum(tiles.cpos_norm, 1e-9))
+            - dneg / (qn * jnp.maximum(tiles.cneg_norm, 1e-9)))
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w", "stride",
+                                             "nonlinearity", "interpret",
+                                             "frames_per_stream"))
+def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
+                              w: int, stride: int,
+                              nonlinearity: NonLin = "rff",
+                              interpret: bool = False,
+                              frames_per_stream: int | None = None
+                              ) -> Array:
+    """(N, H, W) integer ADC codes -> (N, my, mx) score maps, ONE launch.
+
+    The fused encode->score entry point of the int datapath: raw codes in,
+    float score maps out — no float frame is ever materialized. Grid and
+    BlockSpec layout mirror the float :func:`~repro.kernels.
+    sliding_scores.fragment_scores_batch`, including the per-stream
+    class-tile indexing (``frames_per_stream``) used by adapting fleets.
+    """
+    if not jnp.issubdtype(codes.dtype, jnp.integer):
+        raise TypeError(f"int datapath consumes integer ADC codes, got "
+                        f"{codes.dtype} — use adc.quantize_codes/pack_codes"
+                        f" (or precision='float32')")
+    N, H, W = codes.shape
+    my = (H - h) // stride + 1
+    mx = (W - w) // stride + 1
+    geom = tiles.geom
+    n_dt, hw, td = geom.slab_mat.shape
+    assert hw == h * W and td == geom.block_d, (geom.slab_mat.shape, h, W)
+    assert geom.w == w and geom.stride == stride
+
+    per_stream = tiles.cpos_t.ndim == 4
+    if per_stream:
+        if frames_per_stream is None:
+            raise ValueError("per-stream class tiles need frames_per_stream")
+        C = frames_per_stream
+        S = tiles.cpos_t.shape[0]
+        if S * C != N:
+            raise ValueError(f"per-stream tiles: S={S} streams x "
+                             f"C={C} frames != batch N={N}")
+        cpos_t = tiles.cpos_t.reshape(S * n_dt, mx, td)
+        cneg_t = tiles.cneg_t.reshape(S * n_dt, mx, td)
+        class_spec = pl.BlockSpec(
+            (1, mx, td), lambda n, i, j: ((n // C) * n_dt + j, 0, 0))
+    else:
+        C = 0
+        cpos_t, cneg_t = tiles.cpos_t, tiles.cneg_t
+        class_spec = pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0))
+
+    # LSB-free normalization with the slab scale folded in:
+    #   s_n = (acc * slab_scale) / ||codes||  =  acc / (||codes|| / scale)
+    norms = window_norms_codes_batch(codes, h, w, stride)     # (N, my, mx)
+    norms = jnp.maximum(norms, 1e-8) / geom.slab_scale
+
+    kern = functools.partial(_score_kernel_int, h=h, stride=stride, w=w,
+                             W=W, mx=mx, td=td, nonlinearity=nonlinearity)
+
+    dpos, dneg, qq = pl.pallas_call(
+        kern,
+        grid=(N, my, n_dt),
+        in_specs=[
+            pl.BlockSpec((1, H, W), lambda n, i, j: (n, 0, 0)),    # codes
+            pl.BlockSpec((1, hw, td), lambda n, i, j: (j, 0, 0)),  # slabs
+            pl.BlockSpec((mx, W), lambda n, i, j: (0, 0)),         # mask
+            pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0)),  # bias
+            class_spec,                                            # cpos
+            class_spec,                                            # cneg
+            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),   # norms
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((N, my, mx), jnp.float32)] * 3,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(codes, geom.slab_mat, geom.win_mask, geom.bias_t, cpos_t, cneg_t,
+      norms)
+
+    return _cosine_epilogue(dpos, dneg, qq, tiles, per_stream, C)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp twin (the oracle AND the jnp-backend int path)
+# ---------------------------------------------------------------------------
+
+def _int_scores_shared(codes, geom: IntScoreGeometry, cpos_t, cneg_t, *,
+                       h: int, w: int, stride: int,
+                       nonlinearity: NonLin):
+    """Shared-classifier jnp int path -> ``(dpos, dneg, qq) (N, my, mx)``.
+
+    Same quantized operands and the same int32 accumulation as the kernel;
+    only the (float) epilogue can differ by rounding. Materializes
+    ``(N, my, mx, D)`` projections — the validation/CPU path, not the
+    deployment one.
+    """
+    N, H, W = codes.shape
+    my = (H - h) // stride + 1
+    mx = (W - w) // stride + 1
+    n_dt = geom.slab_mat.shape[0]
+    td = geom.block_d
+    ky = jnp.arange(my) * stride
+    blocks = codes[:, ky[:, None] + jnp.arange(h)[None, :], :]  # (N,my,h,W)
+
+    # same reuse core as the kernel, vmapped over (frame, row-band, D-tile)
+    acc = jax.vmap(jax.vmap(lambda blk: jax.vmap(
+        lambda slab: _int_window_acc(blk, slab, geom.win_mask, h=h, W=W,
+                                     td=td))(geom.slab_mat)))(
+                                         blocks)   # (N, my, n_dt, mx, TD)
+    acc = acc.transpose(0, 1, 3, 2, 4)             # (N, my, mx, n_dt, TD)
+    norms = window_norms_codes_batch(codes, h, w, stride)
+    norms = jnp.maximum(norms, 1e-8) / geom.slab_scale
+    s_n = acc.astype(jnp.float32) / norms[..., None, None]
+    bias = geom.bias_t.transpose(1, 0, 2)[None, None]     # (1,1,mx,n_dt,TD)
+    phi = apply_nonlinearity(s_n, bias, nonlinearity)
+    cpos = cpos_t.transpose(1, 0, 2)[None, None].astype(jnp.float32)
+    cneg = cneg_t.transpose(1, 0, 2)[None, None].astype(jnp.float32)
+    dpos = jnp.sum(phi * cpos, axis=(3, 4))
+    dneg = jnp.sum(phi * cneg, axis=(3, 4))
+    qq = jnp.sum(phi * phi, axis=(3, 4))
+    return dpos, dneg, qq
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w", "stride",
+                                             "nonlinearity",
+                                             "frames_per_stream"))
+def fragment_scores_batch_int_ref(codes: Array, tiles: IntScoreTiles, *,
+                                  h: int, w: int, stride: int,
+                                  nonlinearity: NonLin = "rff",
+                                  frames_per_stream: int | None = None
+                                  ) -> Array:
+    """Pure-jnp twin of :func:`fragment_scores_batch_int`.
+
+    Identical quantized operands and int32 accumulation; serves as the
+    parity oracle for the kernel and as the ``backend="jnp"`` execution of
+    ``precision="int8"`` in the streaming runtimes.
+    """
+    if not jnp.issubdtype(codes.dtype, jnp.integer):
+        raise TypeError(f"int datapath consumes integer ADC codes, got "
+                        f"{codes.dtype}")
+    geom = tiles.geom
+    per_stream = tiles.cpos_t.ndim == 4
+    if per_stream:
+        if frames_per_stream is None:
+            raise ValueError("per-stream class tiles need frames_per_stream")
+        N, H, W = codes.shape
+        S = tiles.cpos_t.shape[0]
+        C = frames_per_stream
+        if S * C != N:
+            raise ValueError(f"per-stream tiles: S={S} streams x "
+                             f"C={C} frames != batch N={N}")
+        dpos, dneg, qq = jax.vmap(
+            lambda cs, cp, cn: _int_scores_shared(
+                cs, geom, cp, cn, h=h, w=w, stride=stride,
+                nonlinearity=nonlinearity))(
+                    codes.reshape(S, C, H, W), tiles.cpos_t, tiles.cneg_t)
+        my_mx = dpos.shape[2:]
+        dpos, dneg, qq = (x.reshape(N, *my_mx) for x in (dpos, dneg, qq))
+    else:
+        dpos, dneg, qq = _int_scores_shared(
+            codes, geom, tiles.cpos_t, tiles.cneg_t, h=h, w=w,
+            stride=stride, nonlinearity=nonlinearity)
+    return _cosine_epilogue(dpos, dneg, qq, tiles, per_stream,
+                            frames_per_stream or 0)

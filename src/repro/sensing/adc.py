@@ -4,6 +4,15 @@ HyperSense's premise (paper §III-B, [29]): a low-precision ADC is orders of
 magnitude cheaper, and HDC tolerates the resulting quantization noise. The
 HDC gate therefore always sees ``quantize(frame, low_bits)``; the backend
 sees the high-precision frame only when the gate fires.
+
+Two representations of the same capture:
+
+* ``quantize``       — the float *reconstruction* ``codes * LSB`` the
+  float32 datapath consumes;
+* ``quantize_codes`` (+ :func:`pack_codes`) — the raw integer ADC codes the
+  ``precision="int8"`` datapath consumes untouched (the paper's FPGA
+  front-end never materializes floats; see
+  ``repro.kernels.sliding_scores_int``).
 """
 
 from __future__ import annotations
@@ -15,9 +24,27 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+#: full-scale voltage of the simulated converter (shared by both paths)
+V_MAX = 1.5
+
+#: the two datapath precisions of the scoring hot path (ISSUE 4):
+#: "float32" consumes ADC reconstructions, "int8" consumes raw ADC codes
+#: (int32 accumulation, float only at the similarity epilogue)
+PRECISIONS = ("float32", "int8")
+
+
+def lsb(bits: int, v_max: float = V_MAX) -> float:
+    """The quantization step: ``reconstruction = codes * lsb(bits)``."""
+    return v_max / ((1 << bits) - 1)
+
+
+def codes_dtype(bits: int):
+    """Narrowest jnp dtype that holds every ``bits``-bit ADC code."""
+    return jnp.uint8 if bits <= 8 else jnp.int32
+
 
 @partial(jax.jit, static_argnames=("bits",))
-def quantize(frame: Array, bits: int, v_max: float = 1.5) -> Array:
+def quantize(frame: Array, bits: int, v_max: float = V_MAX) -> Array:
     """Uniform mid-rise quantization to ``bits`` bits over [0, v_max].
 
     Defined as ``quantize_codes(frame) * (v_max / levels)`` — the
@@ -33,11 +60,46 @@ def quantize(frame: Array, bits: int, v_max: float = 1.5) -> Array:
 
 
 @partial(jax.jit, static_argnames=("bits",))
-def quantize_codes(frame: Array, bits: int, v_max: float = 1.5) -> Array:
+def quantize_codes(frame: Array, bits: int, v_max: float = V_MAX) -> Array:
     """Integer ADC codes (what the near-sensor datapath actually consumes)."""
     levels = (1 << bits) - 1
     return jnp.round(jnp.clip(frame, 0.0, v_max) / v_max * levels
                      ).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def pack_codes(codes: Array, bits: int) -> Array:
+    """Narrow ``int32`` codes to the wire dtype (``uint8`` for bits <= 8).
+
+    The int8 datapath stores and streams codes at 1 byte/sample — the 4x
+    memory-traffic reduction the low-precision claim is about. Lossless
+    (codes of a ``bits``-bit converter always fit; see
+    :func:`unpack_codes` for the exact inverse).
+    """
+    return codes.astype(codes_dtype(bits))
+
+
+def unpack_codes(packed: Array) -> Array:
+    """Widen packed codes back to ``int32`` (exact inverse of ``pack``)."""
+    return packed.astype(jnp.int32)
+
+
+def check_codes_range(codes: Array, bits: int) -> None:
+    """Reject codes outside ``[0, 2^bits - 1]`` (concrete values only).
+
+    Packing such codes would silently wrap modulo 256 and the int32
+    overflow bounds would be checked against the wrong depth — every
+    entry point that accepts pre-converted integer codes calls this
+    before trusting them. A no-op under tracing (shapes-only contexts).
+    """
+    if isinstance(codes, jax.core.Tracer):
+        return
+    lo, hi = int(codes.min()), int(codes.max())
+    if lo < 0 or hi > (1 << bits) - 1:
+        raise ValueError(
+            f"integer input holds codes in [{lo}, {hi}], outside the "
+            f"{bits}-bit range [0, {(1 << bits) - 1}] — the pack would "
+            f"silently wrap; requantize (or pass the matching adc_bits)")
 
 
 def adc_noise(key: Array, frame: Array, thermal_sigma: float = 0.01) -> Array:

@@ -44,9 +44,10 @@ from repro.core.online import AdaptConfig
 from repro.core.sensor_control import (ControllerConfig, StreamStats,
                                        stats_from_batch)
 from repro.distributed import sharding as shlib
-from repro.sensing.stream import (StreamState, adc_view, init_stream_state,
-                                  model_geometry, super_chunk_fn,
-                                  super_chunk_step)
+from repro.sensing import adc as adc_sim
+from repro.sensing.stream import (StreamState, adc_view, adc_view_codes,
+                                  init_stream_state, model_geometry,
+                                  super_chunk_fn, super_chunk_step)
 
 Array = jax.Array
 
@@ -116,22 +117,26 @@ class FleetReport:
 
 
 def fleet_report(fired, gated, labels,
-                 params: energy.EnergyParams | None = None) -> FleetReport:
+                 params: energy.EnergyParams | None = None,
+                 precision: str = "float32") -> FleetReport:
     """(S, N) gate decisions -> per-stream stats + fleet energy account.
 
     Each stream is billed at its own *measured* duty cycle
     (:func:`repro.core.energy.hypersense_measured`); the baseline is the
-    conventional always-on pipeline on every stream.
+    conventional always-on pipeline on every stream. ``precision`` is the
+    datapath the gate actually ran on — ``"int8"`` bills the always-on
+    HDC work at the integer path's reduced cost.
     """
     params = params or energy.EnergyParams()
     stats = stats_from_batch(fired, gated, labels)
     n = int(np.asarray(fired).shape[1])
-    per_stream = [energy.hypersense_measured(s.duty_cycle, params)
+    per_stream = [energy.hypersense_measured(s.duty_cycle, params,
+                                             precision)
                   for s in stats]
     total = sum(b.total for b in per_stream) * n
     base = energy.conventional(params).total * len(stats) * n
     duty = float(np.mean([s.duty_cycle for s in stats]))
-    mean = energy.hypersense_measured(duty, params)
+    mean = energy.hypersense_measured(duty, params, precision)
     return FleetReport(stats=stats, n_frames=n, duty_cycle=duty,
                        energy_per_frame=mean, energy_total_j=float(total),
                        baseline_total_j=float(base))
@@ -171,12 +176,20 @@ class FleetRunner:
                  t_detection: int | None = None, block_d: int = 512,
                  adc_bits: int | None = None, adc_sigma: float = 0.0,
                  adc_key: Array | int = 0, mesh=None,
-                 adapt: AdaptConfig | None = None):
+                 adapt: AdaptConfig | None = None,
+                 precision: str = "float32"):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if adc_sigma > 0.0 and adc_bits is None:
             raise ValueError("adc_sigma > 0 without adc_bits: the ADC is "
                              "only in the loop when adc_bits is set")
+        if precision not in adc_sim.PRECISIONS:
+            raise ValueError(f"precision must be one of "
+                             f"{adc_sim.PRECISIONS}, got {precision!r}")
+        if precision == "int8" and adc_bits is None:
+            raise ValueError('precision="int8" consumes ADC codes: set '
+                             "adc_bits (the simulated converter's depth)")
+        self.precision = precision
         self.model = model
         self.config = config or ControllerConfig()
         self.chunk_size = chunk_size
@@ -248,18 +261,25 @@ class FleetRunner:
 
     def _ensure_geom(self, W: int):
         if self._geom is None or self._geom[0] != W:
-            self._geom = (W, model_geometry(self.model, W, self.block_d))
+            self._geom = (W, model_geometry(self.model, W, self.block_d,
+                                            self.precision))
         return self._geom[1]
 
     def _ensure_tiles(self, W: int):
         """Frozen-path tile cache, keyed on (width, class-hv identity)."""
         from repro.kernels import ops as kops
+        retile = (kops.retile_classes_int if self.precision == "int8"
+                  else kops.retile_classes)
         chvs = self._state.class_hvs
         if (self._tiles is None or self._tiles[0] != W
                 or self._tiles[1] is not chvs):
-            self._tiles = (W, chvs,
-                           kops.retile_classes(self._ensure_geom(W), chvs))
+            self._tiles = (W, chvs, retile(self._ensure_geom(W), chvs))
         return self._tiles[2]
+
+    @property
+    def _adc_lsb(self) -> float:
+        return (adc_sim.lsb(self.adc_bits)
+                if self.precision == "int8" else 1.0)
 
     def _ensure_step(self, S: int):
         mesh = self._mesh if self._mesh is not None else shlib.current_mesh()
@@ -275,7 +295,8 @@ class FleetRunner:
                 mesh, axes, h=m.h, w=m.w, stride=m.stride,
                 nonlinearity=m.nonlinearity, t_detection=self.t_detection,
                 hold_frames=self.config.hold_frames, backend=self.backend,
-                adapt=self.adapt)
+                adapt=self.adapt, precision=self.precision,
+                adc_lsb=self._adc_lsb)
             self._step_key = key
         return self._step
 
@@ -306,7 +327,25 @@ class FleetRunner:
             raise ValueError(f"fleet size changed: carried state has "
                              f"{self._state.holds.shape[0]} streams, "
                              f"got {S}")
-        if self.adc_bits is not None:
+        if self.precision == "int8":
+            from repro.kernels import ops as kops
+            kops.assert_int_datapath_fits(self.adc_bits, *frames.shape[-2:],
+                                          self.model.h, self.model.w)
+            if jnp.issubdtype(frames.dtype, jnp.integer):
+                # already-converted codes: concrete range check + pack
+                # (sigma forwarded so configured noise can't silently
+                # drop — integer input + sigma > 0 raises, as on
+                # StreamRunner)
+                frames = adc_view_codes(frames, self.adc_bits,
+                                        sigma=self.adc_sigma)
+            else:
+                keys = jax.vmap(
+                    lambda s: jax.random.fold_in(self._adc_key, s))(
+                        jnp.arange(S))
+                frames = jax.vmap(lambda k, f: adc_view_codes(
+                    f, self.adc_bits, sigma=self.adc_sigma, key=k,
+                    start_index=self._n_seen))(keys, frames)
+        elif self.adc_bits is not None:
             keys = jax.vmap(
                 lambda s: jax.random.fold_in(self._adc_key, s))(
                     jnp.arange(S))
@@ -316,7 +355,7 @@ class FleetRunner:
         self._n_seen += n
 
         m = self.model
-        if self.backend == "pallas":
+        if self.backend == "pallas" or self.precision == "int8":
             tiles = (self._ensure_geom(frames.shape[-1])
                      if self.adapt is not None
                      else self._ensure_tiles(frames.shape[-1]))
@@ -359,8 +398,8 @@ def simulate_fleet(model: HyperSenseModel, frames, labels,
                    adc_bits: int | None = None, adc_sigma: float = 0.0,
                    adc_key: Array | int = 0, mesh=None,
                    adapt: AdaptConfig | None = None,
-                   energy_params: energy.EnergyParams | None = None
-                   ) -> FleetReport:
+                   energy_params: energy.EnergyParams | None = None,
+                   precision: str = "float32") -> FleetReport:
     """Run a whole ``(S, N, H, W)`` fleet recording end-to-end.
 
     One :class:`FleetRunner` pass followed by :func:`fleet_report`:
@@ -373,8 +412,8 @@ def simulate_fleet(model: HyperSenseModel, frames, labels,
                          backend=backend, t_detection=t_detection,
                          block_d=block_d, adc_bits=adc_bits,
                          adc_sigma=adc_sigma, adc_key=adc_key, mesh=mesh,
-                         adapt=adapt)
+                         adapt=adapt, precision=precision)
     feed = (labels if adapt is not None and adapt.mode == "label"
             else None)
     _, fired, gated = runner.process(frames, labels=feed)
-    return fleet_report(fired, gated, labels, energy_params)
+    return fleet_report(fired, gated, labels, energy_params, precision)

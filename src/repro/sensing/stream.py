@@ -101,15 +101,51 @@ def adc_view(frames: Array, bits: int, *, sigma: float = 0.0,
     what keeps the runners' slicing-invariance property intact with the
     ADC in the loop.
     """
+    return adc_sim.quantize(
+        _noisy_capture(frames, sigma, key, start_index), bits)
+
+
+def _noisy_capture(frames: Array, sigma: float, key: Array | None,
+                   start_index: int) -> Array:
+    """Pre-conversion thermal noise, keyed by absolute frame index.
+
+    The ONE implementation both ADC views share — the float and codes
+    captures are the same converter by construction, so their noise
+    keying can never drift apart.
+    """
     frames = jnp.asarray(frames)
-    if sigma > 0.0:
-        if key is None:
-            raise ValueError("adc noise (sigma > 0) requires a PRNG key")
-        idx = jnp.arange(frames.shape[0]) + start_index
-        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
-        frames = jax.vmap(
-            lambda k, f: adc_sim.adc_noise(k, f, sigma))(keys, frames)
-    return adc_sim.quantize(frames, bits)
+    if sigma <= 0.0:
+        return frames
+    if key is None:
+        raise ValueError("adc noise (sigma > 0) requires a PRNG key")
+    idx = jnp.arange(frames.shape[0]) + start_index
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+    return jax.vmap(
+        lambda k, f: adc_sim.adc_noise(k, f, sigma))(keys, frames)
+
+
+def adc_view_codes(frames: Array, bits: int, *, sigma: float = 0.0,
+                   key: Array | None = None, start_index: int = 0) -> Array:
+    """Raw integer ADC codes of ``(N, H, W)`` frames (the int8 datapath).
+
+    The codes twin of :func:`adc_view` — same capture (identical noise
+    keying by absolute frame index, identical quantizer), but the output
+    is the packed integer codes the fused int kernel consumes directly,
+    never the float reconstruction. Integer input is treated as
+    already-converted codes and only (re)packed — feeding a code stream
+    back through is the identity, mirroring ``quantize`` idempotence.
+    Codes outside ``[0, 2^bits - 1]`` are rejected (when the values are
+    concrete) rather than silently wrapped by the pack.
+    """
+    frames = jnp.asarray(frames)
+    if jnp.issubdtype(frames.dtype, jnp.integer):
+        if sigma > 0.0:
+            raise ValueError("adc noise applies before conversion; input "
+                             "is already integer ADC codes")
+        adc_sim.check_codes_range(frames, bits)
+        return adc_sim.pack_codes(frames.astype(jnp.int32), bits)
+    frames = _noisy_capture(frames, sigma, key, start_index)
+    return adc_sim.pack_codes(adc_sim.quantize_codes(frames, bits), bits)
 
 
 def gate_scan(decisions: Array, hold_frames: int,
@@ -155,7 +191,8 @@ def _top_fragment_hvs(frames: Array, maps: Array, B0: Array, b: Array, *,
 def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
                    n_valid, labels, *, h, w, stride, nonlinearity,
                    t_detection, hold_frames, backend,
-                   adapt: AdaptConfig | None = None):
+                   adapt: AdaptConfig | None = None,
+                   precision: str = "float32", adc_lsb: float = 1.0):
     """One streaming step over an ``(S, C, H, W)`` super-chunk.
 
     The shared core of both runners: ``StreamRunner`` calls it with
@@ -179,6 +216,16 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     last *valid* frame. ``labels`` is ``(S, C)`` i32 — only consumed in
     ``adapt.mode == "label"`` (pass zeros otherwise).
 
+    With ``precision="int8"`` the ``frames`` argument is the *integer ADC
+    code* super-chunk (from :func:`adc_view_codes`) and ``tiles`` the int
+    precompute (:class:`~repro.kernels.sliding_scores_int.IntScoreTiles`,
+    or the int geometry when adapting) — on BOTH backends: the jnp
+    execution of the int path is the quantized-operand oracle
+    ``fragment_scores_batch_int_ref``, so jnp==pallas parity holds per
+    precision. ``adc_lsb`` (static; ``v_max/levels`` of the converter)
+    only matters to the online-learning re-encode, which dequantizes the
+    top fragment crop — scoring itself is LSB-free.
+
     Returns ``(scores (S, C), fired, gated, new_state)``.
     """
     S, C, H, W = frames.shape
@@ -187,7 +234,26 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     class_hvs = state.class_hvs
     per_stream = adapt is not None and adapt.scope == "per-stream"
 
-    if backend == "pallas":
+    if precision == "int8":
+        from repro.kernels import ops as kops
+        from repro.kernels import sliding_scores_int as ssi
+        if adapt is None:
+            ktiles = tiles                       # frozen: IntScoreTiles
+        elif per_stream:                         # tiles: IntScoreGeometry
+            ktiles = kops.retile_classes_int_fleet(tiles, class_hvs)
+        else:
+            ktiles = kops.retile_classes_int(tiles, class_hvs)
+        if backend == "pallas":
+            maps = kops.fragment_score_map_fleet_int(
+                frames, class_hvs, B0, b, h=h, w=w, stride=stride,
+                nonlinearity=nonlinearity, tiles=ktiles)     # (S,C,my,mx)
+        else:
+            fps = C if ktiles.cpos_t.ndim == 4 else None
+            maps = ssi.fragment_scores_batch_int_ref(
+                frames.reshape(S * C, H, W), ktiles, h=h, w=w,
+                stride=stride, nonlinearity=nonlinearity,
+                frames_per_stream=fps).reshape(S, C, my, mx)
+    elif backend == "pallas":
         from repro.kernels import ops as kops
         if adapt is None:
             ktiles = tiles                       # frozen: host precompute
@@ -228,7 +294,13 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
                          state.holds)
 
     if adapt is not None:
-        hv = _top_fragment_hvs(frames, maps, B0, b, h=h, w=w,
+        # the int path re-encodes from the dequantized crop (h*w values per
+        # frame — never a full float frame); the fragment normalization
+        # makes the LSB cancel, so this matches the float path's samples
+        # up to int8 rounding of the codes themselves
+        obs = (frames.astype(jnp.float32) * jnp.float32(adc_lsb)
+               if precision == "int8" else frames)
+        hv = _top_fragment_hvs(obs, maps, B0, b, h=h, w=w,
                                stride=stride, mx=mx,
                                nonlinearity=nonlinearity)    # (S, C, D)
         labels = labels.astype(jnp.int32)
@@ -256,21 +328,29 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
 super_chunk_step = jax.jit(
     super_chunk_fn, static_argnames=("h", "w", "stride", "nonlinearity",
                                      "t_detection", "hold_frames",
-                                     "backend", "adapt"))
+                                     "backend", "adapt", "precision",
+                                     "adc_lsb"))
 
 
-def model_geometry(model: HyperSenseModel, W: int, block_d: int):
-    """Class-independent ScoreGeometry for ``model`` on width-``W`` frames."""
+def model_geometry(model: HyperSenseModel, W: int, block_d: int,
+                   precision: str = "float32"):
+    """Class-independent geometry for ``model`` on width-``W`` frames
+    (:class:`ScoreGeometry`, or the int8 twin for the integer datapath)."""
     from repro.kernels import ops as kops
-    return kops.precompute_geometry(model.B0, model.b, W=W, w=model.w,
-                                    stride=model.stride, block_d=block_d)
+    fn = (kops.precompute_geometry_int if precision == "int8"
+          else kops.precompute_geometry)
+    return fn(model.B0, model.b, W=W, w=model.w, stride=model.stride,
+              block_d=block_d)
 
 
-def model_tiles(model: HyperSenseModel, W: int, block_d: int):
-    """ScoreTiles precompute for ``model`` on width-``W`` frames."""
+def model_tiles(model: HyperSenseModel, W: int, block_d: int,
+                precision: str = "float32"):
+    """Tile precompute for ``model`` on width-``W`` frames (per precision)."""
     from repro.kernels import ops as kops
-    return kops.retile_classes(model_geometry(model, W, block_d),
-                               model.class_hvs)
+    geom = model_geometry(model, W, block_d, precision)
+    fn = (kops.retile_classes_int if precision == "int8"
+          else kops.retile_classes)
+    return fn(geom, model.class_hvs)
 
 
 class StreamRunner:
@@ -299,16 +379,24 @@ class StreamRunner:
                  t_detection: int | None = None, block_d: int = 512,
                  adc_bits: int | None = None, adc_sigma: float = 0.0,
                  adc_key: Array | int = 0,
-                 adapt: AdaptConfig | None = None):
+                 adapt: AdaptConfig | None = None,
+                 precision: str = "float32"):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if adc_sigma > 0.0 and adc_bits is None:
             raise ValueError("adc_sigma > 0 without adc_bits: the ADC is "
                              "only in the loop when adc_bits is set")
+        if precision not in adc_sim.PRECISIONS:
+            raise ValueError(f"precision must be one of "
+                             f"{adc_sim.PRECISIONS}, got {precision!r}")
+        if precision == "int8" and adc_bits is None:
+            raise ValueError('precision="int8" consumes ADC codes: set '
+                             "adc_bits (the simulated converter's depth)")
         if adapt is not None and adapt.scope == "per-stream":
             raise ValueError('scope="per-stream" is a FleetRunner mode; '
                              "a StreamRunner has exactly one stream — "
                              'use scope="shared"')
+        self.precision = precision
         self.model = model
         self.config = config or ControllerConfig()
         self.chunk_size = chunk_size
@@ -354,18 +442,25 @@ class StreamRunner:
 
     def _ensure_geom(self, W: int):
         if self._geom is None or self._geom[0] != W:
-            self._geom = (W, model_geometry(self.model, W, self.block_d))
+            self._geom = (W, model_geometry(self.model, W, self.block_d,
+                                            self.precision))
         return self._geom[1]
 
     def _ensure_tiles(self, W: int):
         """Frozen-path tile cache, keyed on (width, class-hv identity)."""
         from repro.kernels import ops as kops
+        retile = (kops.retile_classes_int if self.precision == "int8"
+                  else kops.retile_classes)
         chvs = self._state.class_hvs
         if (self._tiles is None or self._tiles[0] != W
                 or self._tiles[1] is not chvs):
-            self._tiles = (W, chvs,
-                           kops.retile_classes(self._ensure_geom(W), chvs))
+            self._tiles = (W, chvs, retile(self._ensure_geom(W), chvs))
         return self._tiles[2]
+
+    @property
+    def _adc_lsb(self) -> float:
+        return (adc_sim.lsb(self.adc_bits)
+                if self.precision == "int8" else 1.0)
 
     def process(self, frames, labels=None
                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -374,7 +469,10 @@ class StreamRunner:
         With ``adc_bits`` set, the scorer sees the low-precision ADC
         capture of each frame (:func:`adc_view`) — the paper's always-on
         path — while the caller keeps the raw high-precision frames for
-        whatever the gate lets through. ``labels`` (``(n,)`` ints) feeds
+        whatever the gate lets through. With ``precision="int8"`` the
+        capture stays *integer codes* end to end (:func:`adc_view_codes`
+        into the fused int kernel; raw integer input is treated as
+        already-converted codes). ``labels`` (``(n,)`` ints) feeds
         ``adapt.mode == "label"`` updates.
         """
         frames = jnp.asarray(frames)
@@ -386,13 +484,21 @@ class StreamRunner:
             if labels.shape != frames.shape[:1]:
                 raise ValueError(f"labels shape {labels.shape} != "
                                  f"(n,) = {frames.shape[:1]}")
-        if self.adc_bits is not None:
+        if self.precision == "int8":
+            from repro.kernels import ops as kops
+            kops.assert_int_datapath_fits(self.adc_bits, *frames.shape[-2:],
+                                          self.model.h, self.model.w)
+            frames = adc_view_codes(frames, self.adc_bits,
+                                    sigma=self.adc_sigma,
+                                    key=self._adc_key,
+                                    start_index=self._n_seen)
+        elif self.adc_bits is not None:
             frames = adc_view(frames, self.adc_bits, sigma=self.adc_sigma,
                               key=self._adc_key, start_index=self._n_seen)
         n = frames.shape[0]
         self._n_seen += n
         m = self.model
-        if self.backend == "pallas":
+        if self.backend == "pallas" or self.precision == "int8":
             tiles = (self._ensure_geom(frames.shape[-1])
                      if self.adapt is not None
                      else self._ensure_tiles(frames.shape[-1]))
@@ -417,7 +523,8 @@ class StreamRunner:
                 h=m.h, w=m.w, stride=m.stride,
                 nonlinearity=m.nonlinearity, t_detection=self.t_detection,
                 hold_frames=self.config.hold_frames, backend=self.backend,
-                adapt=self.adapt)
+                adapt=self.adapt, precision=self.precision,
+                adc_lsb=self._adc_lsb)
             if self.adapt is None:
                 # keep the ORIGINAL class-hv ref: values are untouched and
                 # the identity-keyed tile cache must not churn
@@ -439,7 +546,8 @@ def simulate_stream_batched(model: HyperSenseModel, frames, labels,
                             adc_bits: int | None = None,
                             adc_sigma: float = 0.0,
                             adc_key: Array | int = 0,
-                            adapt: AdaptConfig | None = None) -> StreamStats:
+                            adapt: AdaptConfig | None = None,
+                            precision: str = "float32") -> StreamStats:
     """Chunked-batched twin of ``sensor_control.simulate_stream``.
 
     Produces identical :class:`StreamStats` to replaying
@@ -455,7 +563,7 @@ def simulate_stream_batched(model: HyperSenseModel, frames, labels,
                           backend=backend, t_detection=t_detection,
                           block_d=block_d, adc_bits=adc_bits,
                           adc_sigma=adc_sigma, adc_key=adc_key,
-                          adapt=adapt)
+                          adapt=adapt, precision=precision)
     feed = (labels if adapt is not None and adapt.mode == "label"
             else None)
     _, fired, gated = runner.process(frames, labels=feed)

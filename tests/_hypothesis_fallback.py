@@ -1,17 +1,23 @@
 """Minimal stand-in for ``hypothesis`` so tests collect without the dep.
 
 The real library is preferred (``requirements-dev.txt`` pins it); this
-fallback keeps the property tests *running* — not skipped — in
-environments where it cannot be installed. It implements exactly the API
-surface these tests use:
+fallback keeps the property *bodies* exercised in environments where it
+cannot be installed. It implements exactly the API surface these tests
+use:
 
   hypothesis.given / settings / assume
   strategies.integers / floats / booleans / sampled_from
 
 ``given`` replays each test ``max_examples`` times with deterministic
 draws: the first two examples hit the strategy boundaries (min/max, first/
-last), the rest are seeded-random. No shrinking, no database — boundary +
-random replay is enough to keep the invariants exercised.
+last), the rest are seeded-random. No shrinking, no database.
+
+**A fallback run is never reported as a full pass.** After the replayed
+examples all succeed, the wrapper raises an explicit ``pytest.skip``
+naming the degraded mode, so a CI environment that silently lost the real
+hypothesis shows ``s`` markers instead of green-washing property coverage
+it does not have (ISSUE 4). Failures still fail: any assertion error in a
+replayed example propagates before the skip is reached.
 """
 
 from __future__ import annotations
@@ -86,6 +92,16 @@ def given(*strategies):
                 except _Unsatisfied:
                     continue
             assert ran > 0, "every generated example was rejected by assume"
+            # every example passed — but this was the degraded replay, not
+            # real hypothesis: report it as an explicit skip so CI can't
+            # green-wash missing property coverage. (Failures above have
+            # already propagated; only successful runs reach this line.)
+            import pytest
+            pytest.skip(
+                f"hypothesis not installed: fallback replayed {ran} "
+                f"deterministic examples (boundary + seeded-random, no "
+                f"shrinking) and all passed — install hypothesis for "
+                f"full property testing")
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
         return wrapper

@@ -1,0 +1,14 @@
+"""Shared pytest plumbing: the golden-fixture update flag.
+
+``pytest tests/test_golden.py --update-golden`` regenerates the checked-in
+reference outputs under ``tests/golden/`` instead of comparing against
+them. Regenerating is a *reviewed* action — the diff of the golden files
+IS the behavior change.
+"""
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current implementation "
+             "instead of asserting against it")

@@ -1,0 +1,114 @@
+"""Property tests for the ADC quantize/pack layer (ISSUE 4 satellite).
+
+The int8 datapath's correctness rests on four invariants of the
+conversion layer, exercised here as hypothesis properties:
+
+* **round-trip**  — ``pack -> unpack`` is the identity, and
+  re-converting a reconstruction reproduces the same codes;
+* **idempotence** — requantizing a quantized frame changes nothing (the
+  property that makes pre-quantized and internally-quantized streams
+  indistinguishable to the runners);
+* **monotonicity** — the converter is order-preserving: brighter input
+  can never produce a smaller code (so ADC quantization can only merge,
+  never invert, fragment-score orderings of constant-shape inputs);
+* **no-overflow** — at the maximum supported ``adc_bits`` and window
+  sizes the int32 accumulators of the integer datapath stay within
+  bounds, and the in-path sums equal an exact int64 recomputation.
+"""
+
+try:  # prefer the real library when installed (requirements-dev.txt)
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # fallback keeps these tests running without the dep
+    from _hypothesis_fallback import hypothesis, st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import sliding_scores_int as k_int
+from repro.sensing import adc
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 8))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_pack_unpack_round_trip(seed, bits):
+    """pack -> unpack is the identity on every representable code."""
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (13, 11),
+                           minval=-0.3, maxval=1.8)
+    codes = adc.quantize_codes(x, bits)
+    packed = adc.pack_codes(codes, bits)
+    assert packed.dtype == adc.codes_dtype(bits)
+    np.testing.assert_array_equal(np.asarray(adc.unpack_codes(packed)),
+                                  np.asarray(codes))
+
+
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 12))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_reconstruction_code_round_trip(seed, bits):
+    """quantize_codes(quantize(x)) == quantize_codes(x): the float
+    reconstruction carries exactly its codes, nothing more."""
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (9, 17),
+                           minval=-0.5, maxval=2.0)
+    codes = adc.quantize_codes(x, bits)
+    again = adc.quantize_codes(adc.quantize(x, bits), bits)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(codes))
+
+
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 12))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_quantize_idempotent(seed, bits):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (9, 17),
+                           minval=-0.5, maxval=2.0)
+    q = adc.quantize(x, bits)
+    np.testing.assert_array_equal(np.asarray(adc.quantize(q, bits)),
+                                  np.asarray(q))
+
+
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 12))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_quantize_codes_monotone(seed, bits):
+    """x <= y (elementwise) implies codes(x) <= codes(y)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.uniform(k1, (257,), minval=-0.5, maxval=2.0)
+    bump = jax.random.uniform(k2, (257,), minval=0.0, maxval=1.0)
+    cx = np.asarray(adc.quantize_codes(x, bits))
+    cy = np.asarray(adc.quantize_codes(x + bump, bits))
+    assert (cy >= cx).all()
+    # and the code range is the advertised one
+    assert cx.min() >= 0 and cx.max() <= (1 << bits) - 1
+
+
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 8),
+                  st.integers(2, 16))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_int_accumulators_no_overflow_at_bounds(seed, bits, win):
+    """At max-magnitude codes, the int32 window sum-of-squares equals the
+    exact int64 value — for every (adc_bits, window) the bounds admit."""
+    H = W = max(win * 2, 16)
+    if not k_int.int_datapath_bounds(bits, H, W, win, win)["fits"]:
+        hypothesis.assume(False)
+    key = jax.random.PRNGKey(seed)
+    # adversarial worst case: many max codes
+    sel = jax.random.bernoulli(key, 0.9, (H, W))
+    codes = jnp.where(sel, (1 << bits) - 1, 0).astype(jnp.int32)
+    got = np.asarray(k_int.window_sumsq_codes(codes, win, win, 1))
+    c64 = np.asarray(codes, np.int64)
+    my = H - win + 1
+    want = np.zeros((my, my), np.int64)
+    for y in range(my):
+        for x in range(my):
+            blk = c64[y:y + win, x:x + win]
+            want[y, x] = (blk * blk).sum()
+    assert (want <= k_int.INT32_MAX).all()
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+def test_max_supported_bits_fit_paper_scale():
+    """8-bit codes on 128x128 frames with 16x16 windows — the paper's
+    deployment envelope — fit the int32 datapath with headroom."""
+    b = k_int.int_datapath_bounds(8, 128, 128, 16, 16)
+    assert b["fits"]
+    assert b["sumsq"] * 2 <= k_int.INT32_MAX  # >= 2x headroom

@@ -1,0 +1,35 @@
+"""CI shard lists must partition the test suite (ISSUE 4 satellite).
+
+The suite runs as two parallel CI shards defined in the Makefile
+(``SHARD1_FILES`` / ``SHARD2_FILES``). A new test file that lands in
+neither list would silently never run in CI — this meta-test turns that
+into a hard failure, and also rejects double-booked files (which would
+waste the wall-clock the split exists to save).
+"""
+
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _makefile_list(text: str, var: str) -> set[str]:
+    m = re.search(rf"^{var}\s*=\s*((?:.*\\\n)*.*)$", text, re.M)
+    assert m, f"{var} not found in Makefile"
+    return set(m.group(1).replace("\\\n", " ").split())
+
+
+def test_shards_partition_the_suite():
+    text = (ROOT / "Makefile").read_text()
+    shard1 = _makefile_list(text, "SHARD1_FILES")
+    shard2 = _makefile_list(text, "SHARD2_FILES")
+    actual = {f"tests/{p.name}"
+              for p in (ROOT / "tests").glob("test_*.py")}
+    assert shard1 & shard2 == set(), (
+        f"files booked into both shards: {sorted(shard1 & shard2)}")
+    missing = actual - (shard1 | shard2)
+    assert not missing, (
+        f"test files in neither CI shard (add to SHARD1_FILES or "
+        f"SHARD2_FILES in the Makefile): {sorted(missing)}")
+    stale = (shard1 | shard2) - actual
+    assert not stale, f"shard lists reference missing files: {sorted(stale)}"

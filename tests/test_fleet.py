@@ -55,49 +55,31 @@ def assert_streams_equal(fleet_out, per_stream_outs):
 
 # ---------------------------------------------------------------------------
 # fleet == S independent StreamRunners
+#
+# (the backend-parametrized fleet==independent-runners and the pallas
+# bitwise-parity tests moved into the backend x precision x adapt matrix:
+# tests/test_parity_matrix.py. What stays here is the StreamStats
+# derivation, which the matrix does not cover.)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", ["jnp", "pallas"])
-def test_fleet_matches_independent_runners(backend):
+def test_fleet_stats_match_independent_simulations():
     model = make_model()
     frames, labels = make_fleet(S=4, N=21)
     cfg = ControllerConfig(hold_frames=2)
-    fr = FleetRunner(model, cfg, chunk_size=8, backend=backend, block_d=64)
+    fr = FleetRunner(model, cfg, chunk_size=8, block_d=64)
     out = fr.process(frames)
-    singles = []
-    for s in range(4):
-        r = StreamRunner(model, cfg, chunk_size=8, backend=backend,
-                         block_d=64)
-        singles.append(r.process(frames[s]))
-    assert_streams_equal(out, singles)
-    # ...and the derived StreamStats are identical, stream by stream
+    # the derived StreamStats are identical, stream by stream
     rep = fleet_report(out[1], out[2], labels)
     assert rep.n_sensors == 4 and rep.n_frames == 21
     for s in range(4):
         ref = simulate_stream_batched(model, frames[s], labels[s], cfg,
-                                      chunk_size=8, backend=backend,
-                                      block_d=64)
+                                      chunk_size=8, block_d=64)
         got = rep.stats[s]
         np.testing.assert_array_equal(got.decisions, ref.decisions)
         np.testing.assert_array_equal(got.gated_on, ref.gated_on)
         assert got.duty_cycle == ref.duty_cycle
         assert got.missed_positive == ref.missed_positive
         assert got.false_active == ref.false_active
-
-
-def test_fleet_pallas_scores_bitwise_match_stream_runner():
-    """The kernel grid's batch axis is parallel: flattening S*C must not
-    change per-frame numerics at all (stronger than allclose)."""
-    model = make_model()
-    frames, _ = make_fleet(S=3, N=9)
-    cfg = ControllerConfig(hold_frames=1)
-    fr = FleetRunner(model, cfg, chunk_size=4, backend="pallas", block_d=64)
-    s_f, _, _ = fr.process(frames)
-    for s in range(3):
-        r = StreamRunner(model, cfg, chunk_size=4, backend="pallas",
-                         block_d=64)
-        s_i, _, _ = r.process(frames[s])
-        np.testing.assert_array_equal(s_f[s], s_i)
 
 
 def test_fleet_state_carries_across_process_calls():
@@ -200,6 +182,53 @@ def test_fleet_sharded_matches_unsharded(backend):
     np.testing.assert_array_equal(g0, g1)
 
 
+def test_fleet_int8_per_stream_adapt_backend_parity():
+    """The per-stream-adapt x int8 cell: retile_classes_int_fleet feeding
+    the kernel's stream-indexed int8 class tiles must agree with the jnp
+    oracle, and the per-stream classifiers must actually diverge."""
+    from repro.core.online import AdaptConfig
+
+    model = make_model()
+    frames, labels = make_fleet(S=3, N=9)
+    cfg = ControllerConfig(hold_frames=1)
+    ad = AdaptConfig(mode="label", lr=1.0, scope="per-stream")
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        r = FleetRunner(model, cfg, chunk_size=4, backend=backend,
+                        block_d=64, adc_bits=8, precision="int8", adapt=ad)
+        outs[backend] = r.process(frames, labels=labels)
+        assert r.class_hvs.shape[0] == 3
+        # streams saw different samples -> different classifiers
+        assert not np.allclose(np.asarray(r.class_hvs[0]),
+                               np.asarray(r.class_hvs[1]))
+    np.testing.assert_allclose(outs["pallas"][0], outs["jnp"][0],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(outs["pallas"][1], outs["jnp"][1])
+
+
+def test_fleet_int8_sharded_matches_unsharded():
+    """The int8 ADC-code datapath composes with sensor-axis sharding:
+    shard_map'd integer super-chunks == the unsharded step (the int tiles
+    ride the replicated spec exactly like the float tiles)."""
+    model = make_model()
+    S = 8
+    frames, _ = make_fleet(S=S, N=6)
+    cfg = ControllerConfig(hold_frames=2)
+    plain = FleetRunner(model, cfg, chunk_size=4, block_d=64, adc_bits=8,
+                        precision="int8")
+    s0, f0, g0 = plain.process(frames)
+    n_dev = jax.device_count()
+    data = n_dev if S % n_dev == 0 else 1
+    mesh = jax.make_mesh((data, n_dev // data), ("data", "model"))
+    with shlib.use_mesh(mesh):
+        sharded = FleetRunner(model, cfg, chunk_size=4, block_d=64,
+                              adc_bits=8, precision="int8")
+        s1, f1, g1 = sharded.process(frames)
+    np.testing.assert_allclose(s0, s1, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(f0, f1)
+    np.testing.assert_array_equal(g0, g1)
+
+
 @pytest.mark.skipif(jax.device_count() < 2,
                     reason="needs >1 device "
                            "(XLA_FLAGS=--xla_force_host_platform_"
@@ -261,3 +290,25 @@ def test_hypersense_measured_consistent_with_roc_form():
     a = energy.hypersense(0.1, 0.95, 0.01, p)
     b = energy.hypersense_measured(d, p)
     assert a == b
+
+
+def test_int8_precision_bills_cheaper_hdc():
+    """The int8 datapath reduces exactly the always-on HDC component."""
+    p = energy.EnergyParams()
+    f32 = energy.hypersense_measured(0.1, p)
+    i8 = energy.hypersense_measured(0.1, p, precision="int8")
+    assert i8.hdc == pytest.approx(f32.hdc * p.hdc_int8_factor)
+    assert (i8.sensor, i8.adc, i8.comm, i8.cloud) == (
+        f32.sensor, f32.adc, f32.comm, f32.cloud)
+    assert i8.total < f32.total
+    with pytest.raises(ValueError):
+        energy.hypersense_measured(0.1, p, precision="fp16")
+    # ...and the fleet report threads it through
+    model = make_model()
+    frames, labels = make_fleet(S=2, N=8)
+    r = FleetRunner(model, ControllerConfig(hold_frames=1), chunk_size=4,
+                    adc_bits=8, precision="int8")
+    _, fired, gated = r.process(frames)
+    rep_i8 = fleet_report(fired, gated, labels, precision="int8")
+    rep_f32 = fleet_report(fired, gated, labels)
+    assert rep_i8.energy_total_j < rep_f32.energy_total_j

@@ -167,17 +167,39 @@ def test_ops_fragment_score_map_batch_matches_jnp():
                                    rtol=2e-4, atol=2e-4)
 
 
-def test_frame_scores_batch_pallas_backend_matches_jnp():
+# (runner-level pallas==jnp parity lives in the backend x precision x
+# adapt matrix: tests/test_parity_matrix.py. frame_scores_batch itself —
+# the public batch-scoring API with its own precision/sequential routing —
+# is pinned here across its full routing grid.)
+
+@pytest.mark.parametrize("precision", ["float32", "int8"])
+@pytest.mark.parametrize("sequential", [False, True])
+def test_frame_scores_batch_routing_grid(precision, sequential):
+    """Every (backend, precision, sequential) route returns the same frame
+    scores: pallas==jnp per configuration, sequential==batched per
+    configuration (int8 within exact-path tolerance, float32 vs its own
+    batch exactly)."""
     N, H, W, D, h, w, stride = 6, 14, 14, 64, 3, 3, 2
-    frames = jax.random.uniform(key(16), (N, H, W))
+    frames = jax.random.uniform(key(16), (N, H, W), maxval=1.5)
     B0, b = encoding.make_perm_base_rows(key(17), h, D)
     C = jax.random.normal(key(18), (2, D))
     model = hypersense.HyperSenseModel(C, B0, b, h, w, stride,
                                        t_score=0.0, t_detection=2)
-    got = hypersense.frame_scores_batch(model, frames, backend="pallas")
-    want = hypersense.frame_scores_batch(model, frames, backend="jnp")
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+    kw = dict(precision=precision, sequential=sequential)
+    if precision == "int8":
+        kw["adc_bits"] = 8
+    got_p = hypersense.frame_scores_batch(model, frames, backend="pallas",
+                                          **kw)
+    got_j = hypersense.frame_scores_batch(model, frames, backend="jnp",
+                                          **kw)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(got_j),
                                rtol=2e-4, atol=2e-4)
+    # sequential is a memory strategy, not a numerics change
+    ref = hypersense.frame_scores_batch(
+        model, frames, backend="jnp",
+        **{**kw, "sequential": False})
+    np.testing.assert_allclose(np.asarray(got_j), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

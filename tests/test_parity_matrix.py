@@ -1,0 +1,191 @@
+"""The backend x precision x adapt parity matrix (ISSUE 4 satellite).
+
+ONE parametrized surface replaces the ad-hoc per-file backend-parity
+tests that used to live in ``test_kernels_batch.py`` / ``test_fleet.py``:
+
+* **backend parity** — for every (precision, adapt) cell, the ``pallas``
+  kernel path and the ``jnp`` path produce the same stream outputs
+  (scores allclose, gate decisions identical);
+* **precision ranking parity** — for every (backend, adapt) cell, the
+  int8 datapath's frame scores *rank* identically to the float path's
+  wherever the float scores are separated by more than the quantization
+  margin (and the absolute perturbation stays under half that margin —
+  which makes the ranking assertion a real constraint, not a tautology);
+* **fleet parity** — for every (backend, precision) cell, ``FleetRunner``
+  equals S independent ``StreamRunner``s stream-for-stream.
+
+Every cell shares ONE module-cached scenario (a gate trained on the
+synthetic distribution, so scores are well spread), keeping the matrix
+cheap: each runner executes once and every assertion reads the cache.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fragment_model as fm, hypersense
+from repro.core.online import AdaptConfig
+from repro.core.sensor_control import ControllerConfig
+from repro.sensing import fragments, synthetic
+from repro.sensing.fleet import FleetRunner
+from repro.sensing.stream import StreamRunner
+
+jax.config.update("jax_platform_name", "cpu")
+
+BACKENDS = ["jnp", "pallas"]
+PRECISIONS = ["float32", "int8"]
+ADAPTS = [None, "label"]
+
+FRAME, FRAG, STRIDE, DIM = 24, 6, 3, 128
+N_STREAM, S_FLEET, N_FLEET = 21, 2, 10
+BITS = 8
+#: float-score separation below which int8 ranking flips are tolerated,
+#: as a fraction of the scenario's score span; the matrix also asserts
+#: the int8 perturbation is < margin / 2, so order on separated pairs is
+#: a guaranteed-yet-nontrivial invariant
+MARGIN_FRAC = 0.25
+
+_CACHE = {}
+
+
+def _scenario():
+    if _CACHE:
+        return _CACHE
+    cfg = synthetic.RadarConfig(height=FRAME, width=FRAME)
+    frames, masks, labels = synthetic.make_dataset(
+        jax.random.PRNGKey(0), 40, cfg)
+    frs, labs = fragments.sample_fragments(
+        np.asarray(frames), np.asarray(masks), h=FRAG, w=FRAG,
+        per_frame=2, seed=0)
+    fmodel, _ = fm.train_fragment_model(
+        jax.random.PRNGKey(1), jnp.asarray(frs), jnp.asarray(labs),
+        dim=DIM, epochs=6)
+    B0 = fmodel.B.reshape(FRAG, FRAG, -1)[:, 0, :]
+    # t_score sits between the positive/negative score bands (asserted in
+    # test_scenario_gate_is_nondegenerate), so gate parity is meaningful
+    model = hypersense.from_fragment_model(fmodel, B0, h=FRAG, w=FRAG,
+                                           stride=STRIDE, t_score=0.0125,
+                                           t_detection=1)
+    s_frames, _, s_labels = synthetic.make_dataset(
+        jax.random.PRNGKey(2), N_STREAM, cfg)
+    f_frames = jnp.stack([
+        synthetic.make_dataset(jax.random.PRNGKey(3 + s), N_FLEET, cfg)[0]
+        for s in range(S_FLEET)])
+    _CACHE.update(model=model, frames=s_frames,
+                  labels=np.asarray(s_labels), fleet=f_frames, runs={})
+    return _CACHE
+
+
+def _run_stream(backend, precision, adapt):
+    sc = _scenario()
+    k = ("stream", backend, precision, adapt)
+    if k not in sc["runs"]:
+        a = (AdaptConfig(mode="label", lr=0.5) if adapt == "label"
+             else None)
+        r = StreamRunner(sc["model"], ControllerConfig(hold_frames=2),
+                         chunk_size=8, backend=backend, block_d=64,
+                         adc_bits=BITS, precision=precision, adapt=a)
+        feed = sc["labels"] if adapt == "label" else None
+        sc["runs"][k] = r.process(sc["frames"], labels=feed)
+    return sc["runs"][k]
+
+
+def _run_fleet(backend, precision):
+    sc = _scenario()
+    k = ("fleet", backend, precision)
+    if k not in sc["runs"]:
+        r = FleetRunner(sc["model"], ControllerConfig(hold_frames=2),
+                        chunk_size=4, backend=backend, block_d=64,
+                        adc_bits=BITS, precision=precision)
+        sc["runs"][k] = r.process(sc["fleet"])
+    return sc["runs"][k]
+
+
+def _run_fleet_singles(backend, precision):
+    sc = _scenario()
+    k = ("fleet-singles", backend, precision)
+    if k not in sc["runs"]:
+        outs = []
+        for s in range(S_FLEET):
+            r = StreamRunner(sc["model"], ControllerConfig(hold_frames=2),
+                             chunk_size=4, backend=backend, block_d=64,
+                             adc_bits=BITS, precision=precision)
+            outs.append(r.process(sc["fleet"][s]))
+        sc["runs"][k] = outs
+    return sc["runs"][k]
+
+
+# ---------------------------------------------------------------------------
+# backend parity: pallas == jnp in every (precision, adapt) cell
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("adapt", ADAPTS)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_backend_parity(precision, adapt):
+    s_j, f_j, g_j = _run_stream("jnp", precision, adapt)
+    s_p, f_p, g_p = _run_stream("pallas", precision, adapt)
+    np.testing.assert_allclose(s_p, s_j, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(f_p, f_j)
+    np.testing.assert_array_equal(g_p, g_j)
+
+
+# ---------------------------------------------------------------------------
+# precision parity: int8 ranks like float32 in every (backend, adapt) cell
+# ---------------------------------------------------------------------------
+
+def test_scenario_gate_is_nondegenerate():
+    """The shared scenario must exercise both gate outcomes — otherwise
+    the matrix's fired/gated equalities would be vacuous."""
+    _, fired, _ = _run_stream("jnp", "float32", None)
+    assert fired.any() and not fired.all()
+
+
+@pytest.mark.parametrize("adapt", ADAPTS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_precision_ranking_parity(backend, adapt):
+    s_f, _, _ = _run_stream(backend, "float32", adapt)
+    s_i, _, _ = _run_stream(backend, "int8", adapt)
+    margin = MARGIN_FRAC * float(s_f.max() - s_f.min())
+    # absolute perturbation stays under half the separation margin...
+    assert np.abs(s_i - s_f).max() < margin / 2
+    # ...so separated pairs must rank identically — and the scenario has
+    # to actually contain separated pairs for this to mean anything
+    df = s_f[:, None] - s_f[None, :]
+    di = s_i[:, None] - s_i[None, :]
+    sep = np.abs(df) > margin
+    assert sep.sum() > 0.3 * sep.size, "scenario lost its score spread"
+    assert (np.sign(di[sep]) == np.sign(df[sep])).all()
+
+
+def test_precision_scores_not_identical():
+    """int8 really is a different datapath (guards against the precision
+    flag silently routing to the float kernel)."""
+    s_f, _, _ = _run_stream("pallas", "float32", None)
+    s_i, _, _ = _run_stream("pallas", "int8", None)
+    assert np.abs(s_i - s_f).max() > 0.0
+
+
+# ---------------------------------------------------------------------------
+# fleet parity: FleetRunner == S independent StreamRunners per cell
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", PRECISIONS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fleet_matches_independent_runners(backend, precision):
+    s_f, f_f, g_f = _run_fleet(backend, precision)
+    singles = _run_fleet_singles(backend, precision)
+    for s, (s_i, f_i, g_i) in enumerate(singles):
+        np.testing.assert_allclose(s_f[s], s_i, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(f_f[s], f_i)
+        np.testing.assert_array_equal(g_f[s], g_i)
+
+
+def test_fleet_pallas_bitwise_matches_stream_runner():
+    """The kernel grid's batch axis is parallel: flattening S*C changes
+    nothing at all (stronger than allclose) — on both precisions."""
+    for precision in PRECISIONS:
+        s_f, _, _ = _run_fleet("pallas", precision)
+        singles = _run_fleet_singles("pallas", precision)
+        for s, (s_i, _, _) in enumerate(singles):
+            np.testing.assert_array_equal(s_f[s], s_i)

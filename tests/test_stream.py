@@ -280,3 +280,75 @@ def test_runner_rejects_sigma_without_bits():
     """adc_sigma without adc_bits would be silently ignored — reject it."""
     with pytest.raises(ValueError):
         StreamRunner(make_model(), adc_sigma=0.05)
+
+
+# ---------------------------------------------------------------------------
+# int8 ADC-code datapath through the runner
+# ---------------------------------------------------------------------------
+
+def test_runner_int8_requires_adc_bits_and_valid_precision():
+    with pytest.raises(ValueError):
+        StreamRunner(make_model(), precision="int8")    # no converter depth
+    with pytest.raises(ValueError):
+        StreamRunner(make_model(), precision="fp16", adc_bits=8)
+
+
+def test_adc_view_codes_rejects_out_of_range_codes():
+    """Codes from a deeper converter must be rejected, not silently
+    wrapped modulo 256 by the uint8 pack."""
+    from repro.sensing.stream import adc_view_codes
+
+    frames = jnp.asarray(np.random.RandomState(0).rand(3, 24, 24) * 1.5,
+                         jnp.float32)
+    codes12 = adc.quantize_codes(frames, 12)        # values up to 4095
+    with pytest.raises(ValueError, match="outside"):
+        adc_view_codes(codes12, 8)
+    # matching depth passes through exactly
+    np.testing.assert_array_equal(
+        np.asarray(adc_view_codes(codes12, 12)), np.asarray(codes12))
+    r = StreamRunner(make_model(), chunk_size=4, adc_bits=8,
+                     precision="int8")
+    with pytest.raises(ValueError, match="outside"):
+        r.process(codes12)
+
+
+def test_runner_int8_internal_equals_precoded():
+    """Feeding raw frames through the internal ADC == feeding the packed
+    codes directly: the code stream is the runner's native input."""
+    from repro.sensing.stream import adc_view_codes
+
+    model = make_model()
+    cfg = synthetic.RadarConfig(height=24, width=24)
+    frames, _, _ = synthetic.make_dataset(key(14), 13, cfg)
+    internal = StreamRunner(model, ControllerConfig(hold_frames=2),
+                            chunk_size=4, adc_bits=8, precision="int8")
+    s_i, f_i, g_i = internal.process(frames)
+    codes = adc_view_codes(frames, 8)
+    assert codes.dtype == jnp.uint8
+    pre = StreamRunner(model, ControllerConfig(hold_frames=2),
+                       chunk_size=4, adc_bits=8, precision="int8")
+    s_p, f_p, g_p = pre.process(codes)
+    np.testing.assert_array_equal(s_i, s_p)
+    np.testing.assert_array_equal(f_i, f_p)
+    np.testing.assert_array_equal(g_i, g_p)
+
+
+def test_runner_int8_slicing_invariance():
+    """The int8 path preserves the runners' core contract: output is
+    invariant to how the stream is sliced into process() calls."""
+    model = make_model()
+    cfg = synthetic.RadarConfig(height=24, width=24)
+    frames, _, _ = synthetic.make_dataset(key(15), 23, cfg)
+    whole = StreamRunner(model, ControllerConfig(hold_frames=3),
+                         chunk_size=8, adc_bits=8, precision="int8")
+    s_all, f_all, g_all = whole.process(frames)
+    split = StreamRunner(model, ControllerConfig(hold_frames=3),
+                         chunk_size=8, adc_bits=8, precision="int8")
+    parts = [split.process(frames[a:z])
+             for a, z in [(0, 7), (7, 10), (10, 23)]]
+    np.testing.assert_array_equal(np.concatenate([p[0] for p in parts]),
+                                  s_all)
+    np.testing.assert_array_equal(np.concatenate([p[1] for p in parts]),
+                                  f_all)
+    np.testing.assert_array_equal(np.concatenate([p[2] for p in parts]),
+                                  g_all)
