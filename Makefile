@@ -1,5 +1,5 @@
 .PHONY: test test-shard1 test-shard2 test-cov test-multidevice deps \
-	bench-stream bench-fleet bench-adapt bench-int bench
+	bench-stream bench-fleet bench-adapt bench-int bench-control bench
 
 deps:
 	pip install -r requirements-dev.txt
@@ -15,7 +15,7 @@ SHARD1_FILES = tests/test_kernels.py tests/test_kernels_batch.py \
 	tests/test_kernels_perm.py tests/test_int_datapath.py \
 	tests/test_parity_matrix.py tests/test_stream.py tests/test_fleet.py \
 	tests/test_sensing.py tests/test_adc_quantize.py tests/test_golden.py \
-	tests/test_sharding.py
+	tests/test_sharding.py tests/test_control_loop.py
 SHARD2_FILES = tests/test_arch_smoke.py tests/test_cells.py \
 	tests/test_data_pipeline.py tests/test_gate.py tests/test_hdc_core.py \
 	tests/test_hypersense.py tests/test_online.py tests/test_system.py \
@@ -51,6 +51,9 @@ bench-adapt:
 
 bench-int:
 	PYTHONPATH=src python benchmarks/int_datapath.py
+
+bench-control:
+	PYTHONPATH=src python benchmarks/control_loop.py
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

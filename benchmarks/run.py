@@ -14,7 +14,8 @@ import traceback
 SUITES = ["table1_auc", "fig12_thresholds", "fig13_stride",
           "fig15_fragsize_dim", "fig16_speedup", "stream_throughput",
           "fleet_throughput", "adaptation", "int_datapath",
-          "table3_energy", "hypersense_roofline", "roofline"]
+          "control_loop", "table3_energy", "hypersense_roofline",
+          "roofline"]
 
 
 def main() -> int:

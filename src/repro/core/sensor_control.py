@@ -33,8 +33,89 @@ class ControllerConfig:
                                   # after the last positive (hysteresis)
 
 
+def decimation(config: ControllerConfig) -> int:
+    """Idle-phase LP sampling period, in frames of the ``active_rate_hz``
+    frame clock: the closed-loop ADC converts 1 of every ``decimation``
+    frames while idle, every frame while the gate holds the burst on.
+    ``base == active`` gives 1 (no subsampling — the open-loop behavior).
+    """
+    if config.base_rate_hz <= 0 or config.active_rate_hz <= 0:
+        raise ValueError(f"rates must be positive, got "
+                         f"base={config.base_rate_hz}, "
+                         f"active={config.active_rate_hz}")
+    if config.active_rate_hz < config.base_rate_hz:
+        raise ValueError(f"active_rate_hz {config.active_rate_hz} < "
+                         f"base_rate_hz {config.base_rate_hz}: the burst "
+                         "rate is the stream's frame clock and cannot be "
+                         "slower than the idle trickle")
+    return max(1, int(round(config.active_rate_hz / config.base_rate_hz)))
+
+
+@dataclass(frozen=True)
+class CaptureConfig:
+    """Closed-loop ADC capture policy — the runners' ``control=`` argument.
+
+    With a ``CaptureConfig`` the gate decision at frame ``t`` modulates
+    *capture* at frame ``t+1``: idle frames are temporally subsampled to
+    ``ControllerConfig.base_rate_hz`` (the low-precision ADC converts one
+    frame per :func:`decimation` period; skipped frames are never scored
+    and can never fire), and gated frames burst at ``active_rate_hz``
+    with the high-precision ADC on — HP frames are materialized into a
+    bounded gather buffer as the runtime's deliverable.
+
+    ``subsample=False`` keeps the closed-loop machinery on but converts
+    every frame (bitwise-identical outputs to ``control=None``; same for
+    ``base_rate_hz == active_rate_hz``). ``hp_bits`` is the burst bit
+    depth (the energy model's ``adc_hp_bits``). ``hp_buffer`` bounds how
+    many HP frames one chunk step can materialize (``None`` → the
+    runner's ``chunk_size``; ``0`` → log-only, no frames kept).
+    """
+    subsample: bool = True
+    hp_bits: int = 12
+    hp_buffer: int | None = None
+
+
+@dataclass
+class CaptureLog:
+    """Per-frame record of what the ADC *actually* converted.
+
+    ``sampled``/``gated`` are ``(N,)`` (single stream) or ``(S, N)``
+    (fleet) bools: ``sampled[i]`` — the low-precision ADC converted frame
+    ``i`` (so the HDC gate scored it); ``gated[i]`` — the high-precision
+    ADC converted it and the frame was transmitted downstream. Bit
+    depths of ``None`` fall back to the billing-time
+    :class:`~repro.core.energy.EnergyParams` defaults.
+
+    This is the ground truth :func:`repro.core.energy.from_capture_log`
+    bills from — Joules per conversion actually made and frame actually
+    sent, replacing the duty-fraction approximation.
+    """
+    sampled: np.ndarray
+    gated: np.ndarray
+    lp_bits: int | None = None    # always-on conversion depth
+    hp_bits: int | None = None    # gated burst depth
+    frame_pixels: int = 0         # samples (pixel conversions) per frame
+
+    def samples_converted(self) -> int:
+        """Total ADC conversions made: LP frames + HP frames, at
+        ``frame_pixels`` conversions each."""
+        return int((np.asarray(self.sampled, bool).sum()
+                    + np.asarray(self.gated, bool).sum())
+                   * self.frame_pixels)
+
+
 @dataclass
 class StreamStats:
+    """Per-stream gate accounting.
+
+    ``missed_positive`` / ``false_active`` are class-conditional rates:
+    on a stream with *no* frames of the conditioning class (no object
+    frames / no empty frames) the rate is undefined and reported as
+    ``float("nan")`` — never clamped to a perfect 0.0 score. NaN
+    propagates through :func:`stats_from_batch` and
+    :func:`repro.sensing.fleet.fleet_report` untouched (energy billing
+    only consumes ``duty_cycle``, which is always defined).
+    """
     decisions: np.ndarray         # bool (N,)  HDC fired per frame
     gated_on: np.ndarray          # bool (N,)  HP path enabled per frame
     duty_cycle: float             # fraction of frames HP path was on
@@ -62,19 +143,62 @@ class SensorController:
         return False
 
 
+class RateController:
+    """Rate-aware stateful gate: ``step(fired) -> (sampled, gated)``.
+
+    The closed-loop twin of :class:`SensorController`: besides the HP
+    hysteresis it decides whether the low-precision ADC converts each
+    frame at all. Idle, it samples one frame per :func:`decimation`
+    period (``base_rate_hz`` out of the ``active_rate_hz`` frame clock);
+    a skipped frame is never scored, so its ``fired`` input is ignored.
+    While the gate holds a burst on, every frame is sampled. With
+    ``decimation == 1`` (``base == active``, or ``subsample=False``) the
+    ``gated`` output is bit-identical to :class:`SensorController`.
+
+    :func:`repro.sensing.stream.control_scan` is the jittable scan twin
+    (property-tested equivalent in ``tests/test_control_loop.py``).
+    """
+
+    def __init__(self, config: ControllerConfig | None = None, *,
+                 subsample: bool = True):
+        self.config = config or ControllerConfig()
+        self.decim = decimation(self.config) if subsample else 1
+        self._hold = 0
+        self._phase = 0           # frames until the next idle LP sample
+
+    def reset(self) -> None:
+        self._hold = 0
+        self._phase = 0
+
+    def step(self, fired: bool) -> tuple[bool, bool]:
+        sampled = self._phase == 0 or self._hold > 0
+        fired = bool(fired) and sampled
+        gated = fired or self._hold > 0
+        self._hold = (self.config.hold_frames if fired
+                      else max(self._hold - 1, 0))
+        self._phase = self.decim - 1 if sampled else self._phase - 1
+        return sampled, gated
+
+
 def stats_from(decisions: np.ndarray, gated: np.ndarray,
                labels: np.ndarray) -> StreamStats:
     """Accounting shared by every stream driver (frame-at-a-time and the
-    chunked-batched runtime must produce identical StreamStats)."""
+    chunked-batched runtime must produce identical StreamStats).
+
+    Class-conditional rates over an empty class are undefined — reported
+    as NaN, not clamped to a perfect score (see :class:`StreamStats`).
+    """
     labels = np.asarray(labels).astype(bool)
-    pos = max(int(labels.sum()), 1)
-    neg = max(int((~labels).sum()), 1)
+    pos = int(labels.sum())
+    neg = int((~labels).sum())
     return StreamStats(
         decisions=decisions,
         gated_on=gated,
         duty_cycle=float(gated.mean()),
-        missed_positive=float((labels & ~gated).sum() / pos),
-        false_active=float((~labels & gated).sum() / neg),
+        missed_positive=(float((labels & ~gated).sum() / pos) if pos
+                         else float("nan")),
+        false_active=(float((~labels & gated).sum() / neg) if neg
+                      else float("nan")),
     )
 
 

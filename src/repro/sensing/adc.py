@@ -39,8 +39,15 @@ def lsb(bits: int, v_max: float = V_MAX) -> float:
 
 
 def codes_dtype(bits: int):
-    """Narrowest jnp dtype that holds every ``bits``-bit ADC code."""
-    return jnp.uint8 if bits <= 8 else jnp.int32
+    """Narrowest jnp dtype that holds every ``bits``-bit ADC code.
+
+    ``uint8`` up to 8 bits, ``uint16`` up to 16 (the high-precision burst
+    depths — widening those to int32 would quadruple the wire traffic the
+    memory-bandwidth claim is about), ``int32`` beyond.
+    """
+    if bits <= 8:
+        return jnp.uint8
+    return jnp.uint16 if bits <= 16 else jnp.int32
 
 
 @partial(jax.jit, static_argnames=("bits",))
@@ -69,11 +76,12 @@ def quantize_codes(frame: Array, bits: int, v_max: float = V_MAX) -> Array:
 
 @partial(jax.jit, static_argnames=("bits",))
 def pack_codes(codes: Array, bits: int) -> Array:
-    """Narrow ``int32`` codes to the wire dtype (``uint8`` for bits <= 8).
+    """Narrow ``int32`` codes to the wire dtype (:func:`codes_dtype`).
 
     The int8 datapath stores and streams codes at 1 byte/sample — the 4x
-    memory-traffic reduction the low-precision claim is about. Lossless
-    (codes of a ``bits``-bit converter always fit; see
+    memory-traffic reduction the low-precision claim is about — and the
+    9-16-bit high-precision bursts ride ``uint16`` (2 bytes, 2x).
+    Lossless (codes of a ``bits``-bit converter always fit; see
     :func:`unpack_codes` for the exact inverse).
     """
     return codes.astype(codes_dtype(bits))
@@ -100,6 +108,43 @@ def check_codes_range(codes: Array, bits: int) -> None:
             f"integer input holds codes in [{lo}, {hi}], outside the "
             f"{bits}-bit range [0, {(1 << bits) - 1}] — the pack would "
             f"silently wrap; requantize (or pass the matching adc_bits)")
+
+
+@jax.jit
+def quantize_codes_per_frame(frames: Array, bits: Array,
+                             v_max: float = V_MAX) -> Array:
+    """Variable-depth conversion: frame ``i``'s codes at ``bits[i]`` bits.
+
+    The closed-loop capture primitive: one batch can mix idle
+    low-precision frames, high-precision burst frames, and skipped frames
+    (``bits[i] == 0`` → the converter never ran → all-zero codes).
+    ``bits`` is traced — the per-frame depth is runtime data decided by
+    the controller, not a static compile-time constant.
+    """
+    frames = jnp.asarray(frames)
+    bits = jnp.asarray(bits, jnp.int32)
+    levels = (jnp.left_shift(1, bits) - 1).reshape(
+        bits.shape + (1,) * (frames.ndim - bits.ndim)).astype(jnp.float32)
+    codes = jnp.round(jnp.clip(frames, 0.0, v_max) / v_max
+                      * jnp.maximum(levels, 1.0))
+    return jnp.where(levels > 0, codes, 0.0).astype(jnp.int32)
+
+
+@jax.jit
+def quantize_per_frame(frames: Array, bits: Array,
+                       v_max: float = V_MAX) -> Array:
+    """Reconstruction twin of :func:`quantize_codes_per_frame`:
+    ``codes * per-frame LSB`` (skipped frames, ``bits == 0``, are zeros).
+    At a uniform depth ``b`` this matches ``quantize(frames, b)``."""
+    bits = jnp.asarray(bits, jnp.int32)
+    levels = (jnp.left_shift(1, bits) - 1).reshape(
+        bits.shape + (1,) * (frames.ndim - bits.ndim)).astype(jnp.float32)
+    codes = quantize_codes_per_frame(frames, bits, v_max)
+    return jnp.where(
+        levels > 0,
+        codes.astype(jnp.float32) * (jnp.float32(v_max)
+                                     / jnp.maximum(levels, 1.0)),
+        0.0)
 
 
 def adc_noise(key: Array, frame: Array, thermal_sigma: float = 0.01) -> Array:

@@ -41,10 +41,12 @@ from jax.sharding import PartitionSpec as P
 from repro.core import energy
 from repro.core.hypersense import HyperSenseModel
 from repro.core.online import AdaptConfig
-from repro.core.sensor_control import (ControllerConfig, StreamStats,
-                                       stats_from_batch)
+from repro.core.sensor_control import (CaptureConfig, CaptureLog,
+                                       ControllerConfig, StreamStats,
+                                       decimation, stats_from_batch)
 from repro.distributed import sharding as shlib
 from repro.sensing import adc as adc_sim
+from repro.sensing import stream as stream_mod
 from repro.sensing.stream import (StreamState, adc_view, adc_view_codes,
                                   init_stream_state, model_geometry,
                                   super_chunk_fn, super_chunk_step)
@@ -89,11 +91,11 @@ def _build_step(mesh, axes, **static):
     per_stream = (static.get("adapt") is not None
                   and static["adapt"].scope == "per-stream")
     state_in = StreamState(class_hvs=s3 if per_stream else rep,
-                           holds=s1, frame_idx=rep)
+                           holds=s1, phases=s1, frame_idx=rep)
     return jax.jit(shard_map(
         functools.partial(super_chunk_fn, **static), mesh=mesh,
         in_specs=(s4, state_in, rep, rep, rep, rep, rep, s2),
-        out_specs=(s2, s2, s2, state_in),
+        out_specs=(s2, s2, s2, s2, state_in),
         check_rep=False))
 
 
@@ -118,25 +120,37 @@ class FleetReport:
 
 def fleet_report(fired, gated, labels,
                  params: energy.EnergyParams | None = None,
-                 precision: str = "float32") -> FleetReport:
+                 precision: str = "float32",
+                 capture: CaptureLog | None = None) -> FleetReport:
     """(S, N) gate decisions -> per-stream stats + fleet energy account.
 
-    Each stream is billed at its own *measured* duty cycle
-    (:func:`repro.core.energy.hypersense_measured`); the baseline is the
-    conventional always-on pipeline on every stream. ``precision`` is the
-    datapath the gate actually ran on — ``"int8"`` bills the always-on
-    HDC work at the integer path's reduced cost.
+    With a ``capture`` log (the runners maintain one) the fleet is billed
+    from what the ADCs *actually* converted and transmitted
+    (:func:`repro.core.energy.from_capture_log`) — the primary account:
+    closed-loop idle subsampling shows up as real Joules saved, which the
+    duty-fraction approximation structurally cannot see. Without one,
+    each stream is billed at its own *measured* duty cycle
+    (:func:`repro.core.energy.hypersense_measured`, every frame assumed
+    LP-converted — exactly what the capture log degenerates to in
+    open-loop mode). The baseline is the conventional always-on pipeline
+    on every stream. ``precision`` is the datapath the gate actually ran
+    on — ``"int8"`` bills the always-on HDC work at the integer path's
+    reduced cost.
     """
     params = params or energy.EnergyParams()
     stats = stats_from_batch(fired, gated, labels)
     n = int(np.asarray(fired).shape[1])
-    per_stream = [energy.hypersense_measured(s.duty_cycle, params,
-                                             precision)
-                  for s in stats]
-    total = sum(b.total for b in per_stream) * n
-    base = energy.conventional(params).total * len(stats) * n
     duty = float(np.mean([s.duty_cycle for s in stats]))
-    mean = energy.hypersense_measured(duty, params, precision)
+    if capture is not None:
+        mean = energy.from_capture_log(capture, params, precision)
+        total = mean.total * len(stats) * n
+    else:
+        per_stream = [energy.hypersense_measured(s.duty_cycle, params,
+                                                 precision)
+                      for s in stats]
+        total = sum(b.total for b in per_stream) * n
+        mean = energy.hypersense_measured(duty, params, precision)
+    base = energy.conventional(params).total * len(stats) * n
     return FleetReport(stats=stats, n_frames=n, duty_cycle=duty,
                        energy_per_frame=mean, energy_total_j=float(total),
                        baseline_total_j=float(base))
@@ -168,6 +182,16 @@ class FleetRunner:
     step continues to partition cleanly (no collectives). Shared-scope
     updates are inherently sequential across streams, so that combination
     falls back to the unsharded step.
+
+    ``control=`` (:class:`~repro.core.sensor_control.CaptureConfig`)
+    closes each stream's capture loop independently: per-stream
+    ``(hold, phase)`` ADC state rides the same sharded
+    :class:`~repro.sensing.stream.StreamState` (still no collectives —
+    the control scan is per-stream), idle frames are subsampled to
+    ``base_rate_hz``, and gated bursts are HP-captured into per-stream
+    bounded buffers (:meth:`drain_hp`). The fleet's
+    :attr:`capture_log` is the ``(S, N)`` billing ground truth
+    :func:`fleet_report` prefers over the duty-cycle approximation.
     """
 
     def __init__(self, model: HyperSenseModel,
@@ -177,7 +201,8 @@ class FleetRunner:
                  adc_bits: int | None = None, adc_sigma: float = 0.0,
                  adc_key: Array | int = 0, mesh=None,
                  adapt: AdaptConfig | None = None,
-                 precision: str = "float32"):
+                 precision: str = "float32",
+                 control: CaptureConfig | None = None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if adc_sigma > 0.0 and adc_bits is None:
@@ -203,17 +228,30 @@ class FleetRunner:
                          if isinstance(adc_key, int) else adc_key)
         self._mesh = mesh
         self.adapt = adapt
+        self.control = control
+        self._decim = (None if control is None
+                       else (decimation(self.config) if control.subsample
+                             else 1))
         self._geom = None       # (W, ScoreGeometry) — class-independent
         self._tiles = None      # (W, class_hvs-ref, ScoreTiles) frozen path
         self._state = None      # StreamState, allocated on first process()
         self._n_seen = 0
         self._step = None
         self._step_key = None
+        self._log_sampled: list[np.ndarray] = []   # (S, chunk) blocks
+        self._log_gated: list[np.ndarray] = []
+        self._frame_pixels = 0
+        self._hp: list[list] = []   # per stream: [(abs_idx, frame), ...]
+        self.hp_dropped = 0
 
     def reset(self) -> None:
         self._state = None
         self._n_seen = 0
         self._tiles = None
+        self._log_sampled = []
+        self._log_gated = []
+        self._hp = []
+        self.hp_dropped = 0
 
     @property
     def holds(self) -> Array | None:
@@ -281,6 +319,36 @@ class FleetRunner:
         return (adc_sim.lsb(self.adc_bits)
                 if self.precision == "int8" else 1.0)
 
+    @property
+    def capture_log(self) -> CaptureLog:
+        """(S, N) record of what each stream's ADC actually converted —
+        the billing ground truth :func:`fleet_report` prefers."""
+        cat = (lambda xs: np.concatenate(xs, axis=1) if xs
+               else np.zeros((0, 0), bool))
+        return CaptureLog(sampled=cat(self._log_sampled),
+                          gated=cat(self._log_gated),
+                          lp_bits=self.adc_bits,
+                          hp_bits=(self.control.hp_bits
+                                   if self.control is not None else None),
+                          frame_pixels=self._frame_pixels)
+
+    def drain_hp(self) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Per-stream HP burst deliverables captured so far.
+
+        Returns one ``(indices (M_s,), frames (M_s, H, W))`` pair per
+        stream (absolute frame indices; frames at ``control.hp_bits``)
+        and empties the buffers. Per-chunk buffer overflows are counted
+        fleet-wide in ``hp_dropped``.
+        """
+        out = []
+        for entries in self._hp:
+            idx = np.asarray([i for i, _ in entries], np.int64)
+            frames = (np.stack([f for _, f in entries]) if entries
+                      else np.zeros((0, 0, 0), np.float32))
+            out.append((idx, frames))
+        self._hp = [[] for _ in self._hp]
+        return out
+
     def _ensure_step(self, S: int):
         mesh = self._mesh if self._mesh is not None else shlib.current_mesh()
         axes = _sensor_axes(S, mesh)
@@ -296,7 +364,7 @@ class FleetRunner:
                 nonlinearity=m.nonlinearity, t_detection=self.t_detection,
                 hold_frames=self.config.hold_frames, backend=self.backend,
                 adapt=self.adapt, precision=self.precision,
-                adc_lsb=self._adc_lsb)
+                adc_lsb=self._adc_lsb, decim=self._decim)
             self._step_key = key
         return self._step
 
@@ -312,6 +380,13 @@ class FleetRunner:
             raise ValueError(f"expected (S, n, H, W) frames, "
                              f"got shape {frames.shape}")
         S, n = frames.shape[:2]
+        raw = frames
+        self._frame_pixels = int(frames.shape[-2] * frames.shape[-1])
+        hp_k = stream_mod.resolve_hp_buffer(self.control, self.chunk_size,
+                                            frames.dtype)
+        if not self._hp:
+            self._hp = [[] for _ in range(S)]
+        base = self._n_seen
         if self.adapt is not None and self.adapt.mode == "label":
             if labels is None:
                 raise ValueError('adapt.mode == "label" needs per-frame '
@@ -375,7 +450,7 @@ class FleetRunner:
                 pad = self.chunk_size - n_valid
                 chunk = jnp.pad(chunk, ((0, 0), (0, pad), (0, 0), (0, 0)))
                 lab = jnp.pad(lab, ((0, 0), (0, pad)))
-            s, f, g, new_state = step(
+            s, f, g, smp, new_state = step(
                 chunk, self._state, m.B0, m.b, tiles,
                 jnp.float32(m.t_score), jnp.int32(n_valid), lab)
             if self.adapt is None:
@@ -388,6 +463,20 @@ class FleetRunner:
             scores[:, sl] = np.asarray(s)[:, :n_valid]
             fired[:, sl] = np.asarray(f)[:, :n_valid]
             gated[:, sl] = np.asarray(g)[:, :n_valid]
+            self._log_sampled.append(np.asarray(smp)[:, :n_valid])
+            self._log_gated.append(gated[:, sl].copy())
+            if hp_k > 0:
+                raw_chunk = raw[:, start:start + self.chunk_size]
+                if n_valid < self.chunk_size:
+                    raw_chunk = jnp.pad(
+                        raw_chunk, ((0, 0), (0, self.chunk_size - n_valid),
+                                    (0, 0), (0, 0)))
+                entries, dropped = stream_mod.collect_hp(
+                    raw_chunk, g, n_valid, hp_k, self.control.hp_bits,
+                    base + start)
+                for si in range(S):
+                    self._hp[si].extend(entries[si])
+                self.hp_dropped += dropped
         return scores, fired, gated
 
 
@@ -399,21 +488,26 @@ def simulate_fleet(model: HyperSenseModel, frames, labels,
                    adc_key: Array | int = 0, mesh=None,
                    adapt: AdaptConfig | None = None,
                    energy_params: energy.EnergyParams | None = None,
-                   precision: str = "float32") -> FleetReport:
+                   precision: str = "float32",
+                   control: CaptureConfig | None = None) -> FleetReport:
     """Run a whole ``(S, N, H, W)`` fleet recording end-to-end.
 
     One :class:`FleetRunner` pass followed by :func:`fleet_report`:
     per-stream :class:`StreamStats` (identical to S independent
-    single-stream simulations) plus the fleet energy account. ``adapt``
-    switches on online learning; in ``"label"`` mode the ground-truth
-    ``labels`` double as the feedback signal.
+    single-stream simulations) plus the fleet energy account, billed
+    from the runner's capture log (the per-frame conversions actually
+    made — with ``control=`` the closed loop's savings are real Joules
+    here, not a duty-cycle estimate). ``adapt`` switches on online
+    learning; in ``"label"`` mode the ground-truth ``labels`` double as
+    the feedback signal.
     """
     runner = FleetRunner(model, config, chunk_size=chunk_size,
                          backend=backend, t_detection=t_detection,
                          block_d=block_d, adc_bits=adc_bits,
                          adc_sigma=adc_sigma, adc_key=adc_key, mesh=mesh,
-                         adapt=adapt, precision=precision)
+                         adapt=adapt, precision=precision, control=control)
     feed = (labels if adapt is not None and adapt.mode == "label"
             else None)
     _, fired, gated = runner.process(frames, labels=feed)
-    return fleet_report(fired, gated, labels, energy_params, precision)
+    return fleet_report(fired, gated, labels, energy_params, precision,
+                        capture=runner.capture_log)

@@ -44,11 +44,24 @@ online learning.
 state crosses chunk boundaries, so chunking is invisible:
 :func:`simulate_stream_batched` returns :class:`StreamStats` identical to
 the frame-at-a-time ``simulate_stream``.
+
+**Closed capture loop.** With ``control=``
+(:class:`~repro.core.sensor_control.CaptureConfig`) the gate drives the
+ADC itself: :func:`control_scan` (the jnp twin of
+:class:`~repro.core.sensor_control.RateController`) carries a per-stream
+``(hold, phase)`` state so the decision at frame ``t`` decides whether
+frame ``t+1`` is converted at all — idle trickle at ``base_rate_hz`` /
+``adc_bits``, gated bursts at ``active_rate_hz`` with high-precision
+frames gathered into a bounded buffer (:func:`hp_capture`,
+``runner.drain_hp()``). Every runner keeps a
+:class:`~repro.core.sensor_control.CaptureLog`;
+:func:`repro.core.energy.from_capture_log` bills from it directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -58,8 +71,9 @@ from repro.core import hypersense, online
 from repro.core.encoding import encode_fragments, flat_perm_base
 from repro.core.hypersense import HyperSenseModel, frame_detection_score
 from repro.core.online import AdaptConfig
-from repro.core.sensor_control import (ControllerConfig, StreamStats,
-                                       stats_from)
+from repro.core.sensor_control import (CaptureConfig, CaptureLog,
+                                       ControllerConfig, StreamStats,
+                                       decimation, stats_from)
 from repro.sensing import adc as adc_sim
 
 Array = jax.Array
@@ -72,22 +86,26 @@ class StreamState:
 
     ``class_hvs`` is ``(2, D)`` for a single stream / fleet-shared
     classifier, or ``(S, 2, D)`` when a fleet adapts per-stream models.
-    ``holds`` is the ``(S,)`` controller hysteresis state; ``frame_idx``
-    the absolute index of the next frame (i32 scalar).
+    ``holds`` is the ``(S,)`` controller hysteresis state; ``phases`` the
+    ``(S,)`` closed-loop ADC state (frames until the next idle
+    low-precision sample — identically zero in open-loop mode);
+    ``frame_idx`` the absolute index of the next frame (i32 scalar).
     """
     class_hvs: Array
     holds: Array
+    phases: Array
     frame_idx: Array
 
 
 def init_stream_state(class_hvs: Array, n_streams: int,
                       per_stream: bool = False) -> StreamState:
-    """Fresh state: model's classifier, zero holds, frame 0."""
+    """Fresh state: model's classifier, zero holds/phases, frame 0."""
     chvs = jnp.asarray(class_hvs)
     if per_stream and chvs.ndim == 2:
         chvs = jnp.broadcast_to(chvs, (n_streams, *chvs.shape))
     return StreamState(class_hvs=chvs,
                        holds=jnp.zeros((n_streams,), jnp.int32),
+                       phases=jnp.zeros((n_streams,), jnp.int32),
                        frame_idx=jnp.zeros((), jnp.int32))
 
 
@@ -165,6 +183,106 @@ def gate_scan(decisions: Array, hold_frames: int,
     return gated, holds
 
 
+def control_scan(decisions: Array, hold_frames: int, decim: int,
+                 init_hold: Array | int = 0, init_phase: Array | int = 0
+                 ) -> tuple[Array, Array, Array, Array]:
+    """Jittable :class:`~repro.core.sensor_control.RateController`:
+    ``(sampled, gated, holds, phases)``, each ``(N,)``.
+
+    The closed-loop twin of :func:`gate_scan`: the carried ``(hold,
+    phase)`` pair decides per frame whether the LP ADC converts it at
+    all — a skipped frame's decision input is masked out (the HDC never
+    saw it), which is how the gate decision at frame ``t`` modulates
+    capture at ``t+1`` *inside* one scan. ``holds[i]``/``phases[i]`` are
+    the state after frame ``i``; feed the last valid frame's values back
+    as the next chunk's ``init_*``. With ``decim == 1`` the phase is
+    identically 0, every frame is sampled, and ``gated``/``holds`` are
+    bitwise :func:`gate_scan`'s.
+    """
+    def step(carry, f):
+        hold, phase = carry
+        sampled = (phase == 0) | (hold > 0)
+        fired = f & sampled
+        gated = fired | (hold > 0)
+        hold = jnp.where(fired, hold_frames, jnp.maximum(hold - 1, 0))
+        phase = jnp.where(sampled, decim - 1, phase - 1)
+        return (hold, phase), (sampled, gated, hold, phase)
+
+    init = (jnp.asarray(init_hold, jnp.int32),
+            jnp.asarray(init_phase, jnp.int32))
+    _, (sampled, gated, holds, phases) = jax.lax.scan(
+        step, init, decisions.astype(bool))
+    return sampled, gated, holds, phases
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bits"))
+def hp_capture(raw: Array, gated: Array, n_valid: Array, k: int, bits: int
+               ) -> tuple[Array, Array, Array]:
+    """Bounded gather buffer: the first ``k`` gated frames of a chunk,
+    captured at the high-precision depth — the closed loop's deliverable.
+
+    ``raw`` is the ``(C, H, W)`` *raw* (pre-LP-conversion) chunk; returns
+    ``(buf (k, H, W) float32, idx (k,) i32, count i32)`` where ``idx[j]``
+    is the in-chunk frame index materialized in slot ``j`` (``-1`` =
+    empty slot) and ``count`` is the total gated frames — ``count > k``
+    means the buffer overflowed and ``count - k`` burst frames were
+    dropped (the runners surface this as ``hp_dropped``). Fixed shapes
+    keep the step a single jit trace for every gate outcome.
+    """
+    C = raw.shape[0]
+    pos = jnp.arange(C)
+    take = gated.astype(bool) & (pos < n_valid)
+    rank = jnp.cumsum(take) - 1                    # 0-based among taken
+    slot = jnp.where(take & (rank < k), rank, k)   # k = spill slot
+    q = adc_sim.quantize_per_frame(raw, jnp.where(take, bits, 0))
+    buf = jnp.zeros((k + 1, *raw.shape[1:]), jnp.float32).at[slot].set(q)
+    idx = jnp.full((k + 1,), -1, jnp.int32).at[slot].set(pos)
+    return buf[:k], idx[:k], take.sum()
+
+
+def resolve_hp_buffer(control: CaptureConfig | None, chunk_size: int,
+                      frames_dtype) -> int:
+    """Per-chunk HP buffer size for a runner (0 = no materialization).
+
+    The ONE place both runners resolve ``CaptureConfig.hp_buffer``
+    (``None`` → ``chunk_size``) and reject integer-code input, which has
+    no raw frames to HP-capture from.
+    """
+    if control is None:
+        return 0
+    k = chunk_size if control.hp_buffer is None else control.hp_buffer
+    if k > 0 and jnp.issubdtype(frames_dtype, jnp.integer):
+        raise ValueError(
+            "high-precision materialization needs the raw frames; the "
+            "input is already low-precision ADC codes — pass "
+            "control=CaptureConfig(hp_buffer=0) to run the closed loop "
+            "log-only")
+    return k
+
+
+def collect_hp(raw_chunk: Array, gated: Array, n_valid: int, k: int,
+               bits: int, base: int) -> tuple[list[list], int]:
+    """Drain one chunk's bounded HP buffers to host land.
+
+    ``raw_chunk`` is ``(S, C, H, W)`` (padded to the chunk size), ``gated``
+    the step's ``(S, C)`` gate output. Returns (one
+    ``[(absolute_frame_idx, hp_frame), ...]`` list per stream — in frame
+    order — and the number of burst frames dropped to full buffers);
+    shared by both runners so the drop accounting can never diverge.
+    """
+    buf, idx, cnt = jax.vmap(
+        lambda r, gt: hp_capture(r, gt, jnp.int32(n_valid), k, bits))(
+            raw_chunk, gated)
+    idx, buf = np.asarray(idx), np.asarray(buf)
+    out, dropped = [], 0
+    for si in range(idx.shape[0]):
+        kept = idx[si] >= 0
+        out.append(list(zip((base + idx[si][kept]).tolist(),
+                            buf[si][kept])))
+        dropped += max(int(cnt[si]) - int(kept.sum()), 0)
+    return out, dropped
+
+
 def _top_fragment_hvs(frames: Array, maps: Array, B0: Array, b: Array, *,
                       h: int, w: int, stride: int, mx: int,
                       nonlinearity) -> Array:
@@ -192,7 +310,8 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
                    n_valid, labels, *, h, w, stride, nonlinearity,
                    t_detection, hold_frames, backend,
                    adapt: AdaptConfig | None = None,
-                   precision: str = "float32", adc_lsb: float = 1.0):
+                   precision: str = "float32", adc_lsb: float = 1.0,
+                   decim: int | None = None):
     """One streaming step over an ``(S, C, H, W)`` super-chunk.
 
     The shared core of both runners: ``StreamRunner`` calls it with
@@ -226,7 +345,19 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     only matters to the online-learning re-encode, which dequantizes the
     top fragment crop — scoring itself is LSB-free.
 
-    Returns ``(scores (S, C), fired, gated, new_state)``.
+    ``decim`` switches on the *closed capture loop*: ``None`` (default)
+    is the open-loop step — every valid frame is LP-converted and the
+    gate is the plain :func:`gate_scan` hysteresis, a code path bitwise
+    identical to the pre-closed-loop runtime. An integer ``decim`` runs
+    :func:`control_scan` instead, with the per-stream ``state.phases``
+    ADC state carried across chunks: idle frames are subsampled to one
+    LP conversion per ``decim`` frames, a skipped frame can never fire
+    (its score is still computed — simulation artifact — but masked out
+    of the decision, the gate, and the online update), and ``decim == 1``
+    reproduces the open-loop outputs bitwise.
+
+    Returns ``(scores (S, C), fired, gated, sampled, new_state)``;
+    ``sampled`` marks the frames the LP ADC actually converted.
     """
     S, C, H, W = frames.shape
     my = (H - h) // stride + 1
@@ -287,8 +418,19 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     else:
         fired = (scores > t_score) & valid[None, :]
 
-    gated, holds_seq = jax.vmap(
-        lambda f, h0: gate_scan(f, hold_frames, h0))(fired, state.holds)
+    if decim is None:
+        sampled = jnp.broadcast_to(valid[None, :], (S, C))
+        gated, holds_seq = jax.vmap(
+            lambda f, h0: gate_scan(f, hold_frames, h0))(fired, state.holds)
+        phase_out = state.phases
+    else:
+        sampled, gated, holds_seq, phases_seq = jax.vmap(
+            lambda f, h0, p0: control_scan(f, hold_frames, decim, h0, p0))(
+                fired, state.holds, state.phases)
+        fired = fired & sampled
+        phase_out = jnp.where(n_valid > 0,
+                              phases_seq[:, jnp.maximum(n_valid - 1, 0)],
+                              state.phases)
     hold_out = jnp.where(n_valid > 0,
                          holds_seq[:, jnp.maximum(n_valid - 1, 0)],
                          state.holds)
@@ -304,24 +446,42 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
                                stride=stride, mx=mx,
                                nonlinearity=nonlinearity)    # (S, C, D)
         labels = labels.astype(jnp.int32)
-        if per_stream:
-            class_hvs = jax.vmap(
-                lambda cv, hs, ls: online.apply_chunk(
-                    adapt, cv, hs, ls, valid)[0])(class_hvs, hv, labels)
+        if decim is None:
+            if per_stream:
+                class_hvs = jax.vmap(
+                    lambda cv, hs, ls: online.apply_chunk(
+                        adapt, cv, hs, ls, valid)[0])(class_hvs, hv, labels)
+            else:
+                # one shared classifier: fold samples in time order (stream
+                # index breaks ties), matching real arrival order
+                dim = hv.shape[-1]
+                hv_t = hv.transpose(1, 0, 2).reshape(C * S, dim)
+                lab_t = labels.T.reshape(C * S)
+                val_t = jnp.repeat(valid, S)
+                class_hvs = online.apply_chunk(adapt, class_hvs, hv_t,
+                                               lab_t, val_t)[0]
         else:
-            # one shared classifier: fold samples in time order (stream
-            # index breaks ties), matching real arrival order
-            dim = hv.shape[-1]
-            hv_t = hv.transpose(1, 0, 2).reshape(C * S, dim)
-            lab_t = labels.T.reshape(C * S)
-            val_t = jnp.repeat(valid, S)
-            class_hvs = online.apply_chunk(adapt, class_hvs, hv_t, lab_t,
-                                           val_t)[0]
+            # closed loop: a frame the LP ADC skipped was never scored —
+            # it must not feed the online update either
+            seen = sampled & valid[None, :]                     # (S, C)
+            if per_stream:
+                class_hvs = jax.vmap(
+                    lambda cv, hs, ls, vl: online.apply_chunk(
+                        adapt, cv, hs, ls, vl)[0])(class_hvs, hv, labels,
+                                                   seen)
+            else:
+                dim = hv.shape[-1]
+                hv_t = hv.transpose(1, 0, 2).reshape(C * S, dim)
+                lab_t = labels.T.reshape(C * S)
+                val_t = seen.T.reshape(C * S)
+                class_hvs = online.apply_chunk(adapt, class_hvs, hv_t,
+                                               lab_t, val_t)[0]
 
     new_state = StreamState(class_hvs=class_hvs, holds=hold_out,
+                            phases=phase_out,
                             frame_idx=state.frame_idx
                             + jnp.asarray(n_valid, jnp.int32))
-    return scores, fired, gated, new_state
+    return scores, fired, gated, sampled, new_state
 
 
 #: module-level jit: every runner instance shares one trace cache.
@@ -329,7 +489,7 @@ super_chunk_step = jax.jit(
     super_chunk_fn, static_argnames=("h", "w", "stride", "nonlinearity",
                                      "t_detection", "hold_frames",
                                      "backend", "adapt", "precision",
-                                     "adc_lsb"))
+                                     "adc_lsb", "decim"))
 
 
 def model_geometry(model: HyperSenseModel, W: int, block_d: int,
@@ -371,6 +531,19 @@ class StreamRunner:
     gather on the ``pallas`` backend — never a host-side re-precompute;
     the tile cache is keyed on class-hv *identity*, so stale tiles are
     impossible).
+
+    ``control=`` (a :class:`~repro.core.sensor_control.CaptureConfig`)
+    closes the capture loop: the ``ControllerConfig`` rates stop being
+    decorative — idle frames are LP-converted at ``base_rate_hz`` only
+    (temporal decimation inside the chunk scan; skipped frames can never
+    fire), gate bursts capture every frame, and the gated frames are
+    additionally converted at ``control.hp_bits`` into a bounded buffer,
+    drained via :meth:`drain_hp` — the runtime's deliverable to the
+    downstream backend. Every runner (open- or closed-loop) keeps a
+    :attr:`capture_log` of what the ADC actually converted, which
+    :func:`repro.core.energy.from_capture_log` bills directly. With
+    ``base == active`` rates or ``subsample=False`` the closed-loop
+    outputs are bitwise-identical to ``control=None``.
     """
 
     def __init__(self, model: HyperSenseModel,
@@ -380,7 +553,8 @@ class StreamRunner:
                  adc_bits: int | None = None, adc_sigma: float = 0.0,
                  adc_key: Array | int = 0,
                  adapt: AdaptConfig | None = None,
-                 precision: str = "float32"):
+                 precision: str = "float32",
+                 control: CaptureConfig | None = None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if adc_sigma > 0.0 and adc_bits is None:
@@ -409,15 +583,30 @@ class StreamRunner:
         self._adc_key = (jax.random.PRNGKey(adc_key)
                          if isinstance(adc_key, int) else adc_key)
         self.adapt = adapt
+        self.control = control
+        self._decim = (None if control is None
+                       else (decimation(self.config) if control.subsample
+                             else 1))
         self._geom = None       # (W, ScoreGeometry) — class-independent
         self._tiles = None      # (W, class_hvs-ref, ScoreTiles) frozen path
         self._state = init_stream_state(model.class_hvs, 1)
         self._n_seen = 0        # absolute frame index (keys the ADC noise)
+        self._log_sampled: list[np.ndarray] = []
+        self._log_gated: list[np.ndarray] = []
+        self._frame_pixels = 0
+        self._hp_idx: list[int] = []
+        self._hp_frames: list[np.ndarray] = []
+        self.hp_dropped = 0     # burst frames lost to a full HP buffer
 
     def reset(self) -> None:
         self._state = init_stream_state(self.model.class_hvs, 1)
         self._n_seen = 0
         self._tiles = None
+        self._log_sampled = []
+        self._log_gated = []
+        self._hp_idx = []
+        self._hp_frames = []
+        self.hp_dropped = 0
 
     @property
     def class_hvs(self) -> Array:
@@ -462,6 +651,33 @@ class StreamRunner:
         return (adc_sim.lsb(self.adc_bits)
                 if self.precision == "int8" else 1.0)
 
+    @property
+    def capture_log(self) -> CaptureLog:
+        """What the ADC actually converted so far (across ``process``
+        calls; cleared by :meth:`reset`) — the billing ground truth for
+        :func:`repro.core.energy.from_capture_log`."""
+        cat = (lambda xs: np.concatenate(xs) if xs
+               else np.zeros((0,), bool))
+        return CaptureLog(sampled=cat(self._log_sampled),
+                          gated=cat(self._log_gated),
+                          lp_bits=self.adc_bits,
+                          hp_bits=(self.control.hp_bits
+                                   if self.control is not None else None),
+                          frame_pixels=self._frame_pixels)
+
+    def drain_hp(self) -> tuple[np.ndarray, np.ndarray]:
+        """Take the high-precision burst frames captured so far.
+
+        Returns ``(indices (M,) — absolute frame indices, frames
+        (M, H, W) at control.hp_bits)`` and empties the buffer; frames a
+        full per-chunk buffer dropped are counted in ``hp_dropped``.
+        """
+        idx = np.asarray(self._hp_idx, np.int64)
+        frames = (np.stack(self._hp_frames) if self._hp_frames
+                  else np.zeros((0, 0, 0), np.float32))
+        self._hp_idx, self._hp_frames = [], []
+        return idx, frames
+
     def process(self, frames, labels=None
                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(n, H, W) frames -> (scores (n,), fired (n,), gated (n,)).
@@ -476,6 +692,11 @@ class StreamRunner:
         ``adapt.mode == "label"`` updates.
         """
         frames = jnp.asarray(frames)
+        raw = frames
+        self._frame_pixels = int(frames.shape[-2] * frames.shape[-1])
+        hp_k = resolve_hp_buffer(self.control, self.chunk_size,
+                                 frames.dtype)
+        base = self._n_seen
         if self.adapt is not None and self.adapt.mode == "label":
             if labels is None:
                 raise ValueError('adapt.mode == "label" needs per-frame '
@@ -517,14 +738,14 @@ class StreamRunner:
                 pad = self.chunk_size - n_valid
                 chunk = jnp.pad(chunk, ((0, pad), (0, 0), (0, 0)))
                 lab = jnp.pad(lab, (0, pad))
-            s, f, g, new_state = super_chunk_step(
+            s, f, g, smp, new_state = super_chunk_step(
                 chunk[None], self._state, m.B0, m.b, tiles,
                 jnp.float32(m.t_score), jnp.int32(n_valid), lab[None],
                 h=m.h, w=m.w, stride=m.stride,
                 nonlinearity=m.nonlinearity, t_detection=self.t_detection,
                 hold_frames=self.config.hold_frames, backend=self.backend,
                 adapt=self.adapt, precision=self.precision,
-                adc_lsb=self._adc_lsb)
+                adc_lsb=self._adc_lsb, decim=self._decim)
             if self.adapt is None:
                 # keep the ORIGINAL class-hv ref: values are untouched and
                 # the identity-keyed tile cache must not churn
@@ -535,6 +756,20 @@ class StreamRunner:
             scores[sl] = np.asarray(s)[0, :n_valid]
             fired[sl] = np.asarray(f)[0, :n_valid]
             gated[sl] = np.asarray(g)[0, :n_valid]
+            self._log_sampled.append(np.asarray(smp)[0, :n_valid])
+            self._log_gated.append(gated[sl].copy())
+            if hp_k > 0:
+                raw_chunk = raw[start:start + self.chunk_size]
+                if n_valid < self.chunk_size:
+                    raw_chunk = jnp.pad(
+                        raw_chunk,
+                        ((0, self.chunk_size - n_valid), (0, 0), (0, 0)))
+                entries, dropped = collect_hp(
+                    raw_chunk[None], g, n_valid, hp_k,
+                    self.control.hp_bits, base + start)
+                self._hp_idx.extend(i for i, _ in entries[0])
+                self._hp_frames.extend(f for _, f in entries[0])
+                self.hp_dropped += dropped
         return scores, fired, gated
 
 
@@ -547,7 +782,9 @@ def simulate_stream_batched(model: HyperSenseModel, frames, labels,
                             adc_sigma: float = 0.0,
                             adc_key: Array | int = 0,
                             adapt: AdaptConfig | None = None,
-                            precision: str = "float32") -> StreamStats:
+                            precision: str = "float32",
+                            control: CaptureConfig | None = None
+                            ) -> StreamStats:
     """Chunked-batched twin of ``sensor_control.simulate_stream``.
 
     Produces identical :class:`StreamStats` to replaying
@@ -563,7 +800,8 @@ def simulate_stream_batched(model: HyperSenseModel, frames, labels,
                           backend=backend, t_detection=t_detection,
                           block_d=block_d, adc_bits=adc_bits,
                           adc_sigma=adc_sigma, adc_key=adc_key,
-                          adapt=adapt, precision=precision)
+                          adapt=adapt, precision=precision,
+                          control=control)
     feed = (labels if adapt is not None and adapt.mode == "label"
             else None)
     _, fired, gated = runner.process(frames, labels=feed)

@@ -31,10 +31,12 @@ from repro.sensing import adc
 jax.config.update("jax_platform_name", "cpu")
 
 
-@hypothesis.given(st.integers(0, 2**16), st.integers(1, 8))
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 16))
 @hypothesis.settings(max_examples=25, deadline=None)
 def test_pack_unpack_round_trip(seed, bits):
-    """pack -> unpack is the identity on every representable code."""
+    """pack -> unpack is the identity on every representable code — at
+    every depth the wire format supports, incl. the 9-16-bit uint16
+    branch (the high-precision burst depths)."""
     x = jax.random.uniform(jax.random.PRNGKey(seed), (13, 11),
                            minval=-0.3, maxval=1.8)
     codes = adc.quantize_codes(x, bits)
@@ -42,6 +44,51 @@ def test_pack_unpack_round_trip(seed, bits):
     assert packed.dtype == adc.codes_dtype(bits)
     np.testing.assert_array_equal(np.asarray(adc.unpack_codes(packed)),
                                   np.asarray(codes))
+
+
+def test_codes_dtype_stays_narrow_above_8_bits():
+    """9-16-bit codes ride uint16 (2 bytes), not int32 — the wire-format
+    memory-traffic claim must hold for the HP burst depths too."""
+    assert adc.codes_dtype(8) == jnp.uint8
+    for bits in (9, 12, 16):
+        assert adc.codes_dtype(bits) == jnp.uint16
+        # max code of the depth survives the pack exactly
+        top = jnp.full((3,), (1 << bits) - 1, jnp.int32)
+        packed = adc.pack_codes(top, bits)
+        assert packed.dtype == jnp.uint16
+        np.testing.assert_array_equal(np.asarray(adc.unpack_codes(packed)),
+                                      np.asarray(top))
+    assert adc.codes_dtype(17) == jnp.int32
+
+
+@hypothesis.given(st.integers(0, 2**16), st.integers(1, 16))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_quantize_per_frame_uniform_depth_matches_quantize(seed, bits):
+    """At one uniform depth the per-frame-bits converter IS quantize;
+    bits == 0 frames (skipped by the closed loop) come back all-zero."""
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (5, 9, 7),
+                           minval=-0.3, maxval=1.8)
+    per = adc.quantize_per_frame(x, jnp.full((5,), bits, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(per),
+                                  np.asarray(adc.quantize(x, bits)))
+    codes = adc.quantize_codes_per_frame(x, jnp.full((5,), bits,
+                                                     jnp.int32))
+    np.testing.assert_array_equal(np.asarray(codes),
+                                  np.asarray(adc.quantize_codes(x, bits)))
+    skipped = adc.quantize_per_frame(x, jnp.zeros((5,), jnp.int32))
+    assert not np.asarray(skipped).any()
+
+
+def test_quantize_per_frame_mixed_depths():
+    """One batch mixing skipped / LP / HP frames converts each at its own
+    depth — the closed-loop capture primitive."""
+    x = jax.random.uniform(jax.random.PRNGKey(3), (3, 8, 8), maxval=1.5)
+    bits = jnp.asarray([0, 4, 12], jnp.int32)
+    got = np.asarray(adc.quantize_per_frame(x, bits))
+    assert not got[0].any()
+    np.testing.assert_array_equal(got[1], np.asarray(adc.quantize(x[1], 4)))
+    np.testing.assert_array_equal(got[2],
+                                  np.asarray(adc.quantize(x[2], 12)))
 
 
 @hypothesis.given(st.integers(0, 2**16), st.integers(1, 12))
