@@ -1,5 +1,6 @@
 .PHONY: test test-shard1 test-shard2 test-cov test-multidevice deps \
-	bench-stream bench-fleet bench-adapt bench-int bench-control bench
+	bench-stream bench-fleet bench-adapt bench-int bench-int4 \
+	bench-control bench
 
 deps:
 	pip install -r requirements-dev.txt
@@ -13,7 +14,8 @@ test:
 # so a new test file that lands in neither shard fails CI.
 SHARD1_FILES = tests/test_kernels.py tests/test_kernels_batch.py \
 	tests/test_kernels_perm.py tests/test_int_datapath.py \
-	tests/test_parity_matrix.py tests/test_stream.py tests/test_fleet.py \
+	tests/test_workingset.py tests/test_parity_matrix.py \
+	tests/test_stream.py tests/test_fleet.py \
 	tests/test_sensing.py tests/test_adc_quantize.py tests/test_golden.py \
 	tests/test_sharding.py tests/test_control_loop.py
 SHARD2_FILES = tests/test_arch_smoke.py tests/test_cells.py \
@@ -51,6 +53,12 @@ bench-adapt:
 
 bench-int:
 	PYTHONPATH=src python benchmarks/int_datapath.py
+
+# the CI regression gate for the integer datapaths (int8 rolling-shift
+# kernel vs the expanded-slab baseline, packed int4 AUC parity, binary
+# D-vs-AUC curve, large-W working set, determinism)
+bench-int4:
+	PYTHONPATH=src python benchmarks/int_datapath.py --check
 
 bench-control:
 	PYTHONPATH=src python benchmarks/control_loop.py

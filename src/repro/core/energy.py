@@ -47,6 +47,19 @@ class EnergyParams:
     #: smaller; 0.35 is a conservative blended factor in line with the
     #: SCM always-on accelerator's low-bitwidth datapath [Eggimann 2021].
     hdc_int8_factor: float = 0.35
+    #: int4 datapath factor: halved operand traffic vs int8 (two codes
+    #: per wire byte) on top of the sub-byte MAC scaling — multiplier
+    #: energy scales ~quadratically in operand width (Horowitz, ISSCC'14),
+    #: so 4b work sits well under the int8 blend; 0.22 keeps the same
+    #: conservatism as the 0.35 int8 factor.
+    hdc_int4_factor: float = 0.22
+    #: binary (±1 slab/class) datapath factor: the multiplies degenerate
+    #: to sign-conditioned adds (XOR-popcount in the SCM accelerator,
+    #: Eggimann 2021, which runs binarized at ~5 uW; Basaklar 2021 report
+    #: order-of-magnitude energy wins for 1-bit hypervectors). 0.12 is a
+    #: conservative blend — code traffic and the float epilogue are
+    #: unchanged, so it does not approach the raw 1b/8b MAC ratio.
+    hdc_binary_factor: float = 0.12
     frame_bits: float = 128 * 128 * 8
     comm_j_per_mbit: float = 2.5     # 3G radio
     cloud_j: float = 6.0             # server inference + network + PUE
@@ -104,11 +117,13 @@ def _hdc_j(params: EnergyParams, precision: str) -> float:
     :func:`from_capture_log` can never disagree with
     :func:`hypersense_measured` about the same ``precision`` argument.
     """
-    if precision == "float32":
-        return params.hdc_accel_j
-    if precision == "int8":
-        return params.hdc_accel_j * params.hdc_int8_factor
-    raise ValueError(f"unknown datapath precision {precision!r}")
+    factors = {"float32": 1.0,
+               "int8": params.hdc_int8_factor,
+               "int4": params.hdc_int4_factor,
+               "binary": params.hdc_binary_factor}
+    if precision not in factors:
+        raise ValueError(f"unknown datapath precision {precision!r}")
+    return params.hdc_accel_j * factors[precision]
 
 
 def hypersense_measured(duty: float,

@@ -153,21 +153,34 @@ def frame_scores_batch(model: HyperSenseModel, frames: Array,
     for large D / many frames on the jnp path, where the vmapped
     rolled-product intermediate (N x H x W x D) would blow host memory.
 
-    ``precision="int8"`` runs the low-precision integer datapath
+    The integer precisions (``"int8"``, ``"int4"``, ``"binary"``) run the
+    low-precision integer datapath
     (:mod:`repro.kernels.sliding_scores_int`): ``frames`` may be raw
     integer ADC codes (consumed untouched) or floats (quantized to
     ``adc_bits`` codes first — the simulated converter). ``tiles`` must
-    then come from :func:`repro.kernels.ops.precompute_tiles_int`. Scores
-    stay on the float path's scale (the ADC LSB cancels in the window
-    normalization), so ``t_score``/ROC sweeps transfer unchanged.
+    then come from :func:`repro.kernels.ops.precompute_tiles_int` (built
+    with the matching ``mode`` for ``"binary"``). ``"int4"`` requires
+    ``adc_bits <= 4`` and an even frame width; its codes ride the
+    two-per-byte wire format (packed here at the kernel boundary,
+    unpacked in-kernel). Scores stay on the float path's scale (the ADC
+    LSB cancels in the window normalization), so ``t_score``/ROC sweeps
+    transfer unchanged.
     """
     td = model.t_detection if t_detection is None else t_detection
 
-    if precision == "int8":
+    from repro.sensing import adc as adc_sim
+
+    if precision not in adc_sim.PRECISIONS:
+        raise ValueError(f"precision must be one of {adc_sim.PRECISIONS}, "
+                         f"got {precision!r}")
+    if precision in adc_sim.INT_PRECISIONS:
         from repro.kernels import ops as kops
         from repro.kernels import sliding_scores_int as ssi
-        from repro.sensing import adc as adc_sim
 
+        if precision == "int4" and adc_bits > 4:
+            raise ValueError(
+                f"precision='int4' packs two codes per byte, so adc_bits "
+                f"must be <= 4 (got {adc_bits})")
         if jnp.issubdtype(frames.dtype, jnp.integer):
             # pre-converted codes must actually fit adc_bits, or the
             # overflow bounds below are checked at the wrong depth
@@ -176,22 +189,28 @@ def frame_scores_batch(model: HyperSenseModel, frames: Array,
         else:
             codes = adc_sim.pack_codes(
                 adc_sim.quantize_codes(frames, adc_bits), adc_bits)
+        packed = precision == "int4"
         kops.assert_int_datapath_fits(adc_bits, *codes.shape[-2:],
-                                      model.h, model.w)
+                                      model.h, model.w,
+                                      stride=model.stride, packed=packed)
         if tiles is None:
             tiles = kops.precompute_tiles_int(
                 model.B0, model.b, model.class_hvs, W=codes.shape[-1],
-                w=model.w, stride=model.stride)
+                w=model.w, stride=model.stride,
+                mode="binary" if precision == "binary" else "int8")
+        if packed:
+            codes = adc_sim.pack_nibbles(codes)
 
         def score_maps(c):
             if backend == "pallas":
                 return kops.fragment_score_map_batch_int(
                     c, model.class_hvs, model.B0, model.b, h=model.h,
                     w=model.w, stride=model.stride,
-                    nonlinearity=model.nonlinearity, tiles=tiles)
+                    nonlinearity=model.nonlinearity, tiles=tiles,
+                    packed=packed)
             return ssi.fragment_scores_batch_int_ref(
                 c, tiles, h=model.h, w=model.w, stride=model.stride,
-                nonlinearity=model.nonlinearity)
+                nonlinearity=model.nonlinearity, packed=packed)
 
         if sequential:
             # one frame per (jitted) call: the same memory escape hatch

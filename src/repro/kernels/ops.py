@@ -51,7 +51,8 @@ retile_classes_fleet = _ss.retile_classes_fleet
 ScoreTiles = _ss.ScoreTiles
 ScoreGeometry = _ss.ScoreGeometry
 
-# int8 datapath twins (repro.kernels.sliding_scores_int)
+# integer datapath twins (repro.kernels.sliding_scores_int): int8, the
+# packed-int4 wire format, and the ±1 binary mode all share these
 precompute_tiles_int = _ssi.precompute_tiles_int
 precompute_geometry_int = _ssi.precompute_geometry_int
 retile_classes_int = _ssi.retile_classes_int
@@ -106,46 +107,56 @@ def fragment_score_map_batch_int(codes: Array, class_hvs: Array, B0: Array,
                                  b: Array, *, h: int, w: int, stride: int,
                                  nonlinearity: NonLin = "rff",
                                  tiles: _ssi.IntScoreTiles | None = None,
-                                 block_d: int = 512) -> Array:
+                                 block_d: int = 512,
+                                 packed: bool = False,
+                                 mode: str = "int8") -> Array:
     """(N, H, W) integer ADC codes -> (N, my, mx) score maps, ONE launch.
 
-    The int8 datapath's streaming hot path: raw codes flow into the fused
-    encode->score kernel untouched (int32 accumulation, float only at the
-    similarity epilogue). Pass ``tiles`` from :func:`precompute_tiles_int`
-    to amortize the quantized precompute across chunks.
+    The integer datapath's streaming hot path: raw codes flow into the
+    fused encode->score kernel untouched (int32 accumulation, shifted
+    slabs rolled out in-kernel, float only at the similarity epilogue).
+    ``packed=True`` consumes the int4 wire format (``(N, H, W/2)`` bytes,
+    two codes each); ``mode`` selects the slab/class quantization
+    ("int8" or "binary") when ``tiles`` is built here. Pass ``tiles``
+    from :func:`precompute_tiles_int` to amortize the quantized
+    precompute across chunks.
     """
-    W = codes.shape[-1]
+    W = codes.shape[-1] * (2 if packed else 1)
     if tiles is None:
         tiles = _ssi.precompute_tiles_int(B0, b, class_hvs, W=W, w=w,
-                                          stride=stride, block_d=block_d)
+                                          stride=stride, block_d=block_d,
+                                          mode=mode)
     return _ssi.fragment_scores_batch_int(codes, tiles, h=h, w=w,
                                           stride=stride,
                                           nonlinearity=nonlinearity,
-                                          interpret=_interpret())
+                                          interpret=_interpret(),
+                                          packed=packed)
 
 
 def fragment_score_map_fleet_int(codes: Array, class_hvs: Array, B0: Array,
                                  b: Array, *, h: int, w: int, stride: int,
                                  nonlinearity: NonLin = "rff",
                                  tiles: _ssi.IntScoreTiles | None = None,
-                                 block_d: int = 512) -> Array:
+                                 block_d: int = 512,
+                                 packed: bool = False,
+                                 mode: str = "int8") -> Array:
     """(S, C, H, W) code super-chunk -> (S, C, my, mx), ONE launch.
 
-    Int twin of :func:`fragment_score_map_fleet`: per-stream int8 class
-    tiles (``tiles.cpos_t.ndim == 4``) ride the stream-indexed BlockSpecs
-    of the shared grid.
+    Int twin of :func:`fragment_score_map_fleet`: per-stream int8 (or ±1)
+    class tiles (``tiles.cpos_t.ndim == 4``) ride the stream-indexed
+    BlockSpecs of the shared grid; ``packed`` marks int4 wire codes.
     """
     S, C, H, W = codes.shape
     if tiles is not None and tiles.cpos_t.ndim == 4:
         maps = _ssi.fragment_scores_batch_int(
             codes.reshape(S * C, H, W), tiles, h=h, w=w, stride=stride,
             nonlinearity=nonlinearity, interpret=_interpret(),
-            frames_per_stream=C)
+            frames_per_stream=C, packed=packed)
     else:
         maps = fragment_score_map_batch_int(
             codes.reshape(S * C, H, W), class_hvs, B0, b, h=h, w=w,
             stride=stride, nonlinearity=nonlinearity, tiles=tiles,
-            block_d=block_d)
+            block_d=block_d, packed=packed, mode=mode)
     return maps.reshape(S, C, *maps.shape[1:])
 
 

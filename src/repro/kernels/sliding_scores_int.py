@@ -12,21 +12,34 @@ in the tiny similarity/normalization epilogue.
 
 Why the integer path is *structurally* different (not just a dtype swap):
 
-* **Expanded shifted slabs + vectorized prefix reuse.** The float kernel
-  walks each frame row with an ``O(h*(W+mx))``-step scalar prefix-sum loop
-  (the systolic FIFO in loop form). The int kernel *pre-expands* all ``W``
-  cyclic shifts of every base row into one ``(h*W, TD)`` operand —
-  affordable **because it is int8**: the expansion is 4x smaller than
-  float32 and fits VMEM at deployment scale (h=16, W=128, TD=512 -> 1 MB
-  int8/tile). The per-grid-step projection then keeps the paper's
-  computation reuse with zero scalar loops: ``h`` wide elementwise
-  products against the pre-shifted slabs fold into the per-column rolled
-  sums ``G (W, TD)`` (each code multiplied once per base row — the reused
-  product), and the fragment windows fall out of ONE small integer matmul
-  ``win_mask (mx, W) @ G`` — MXU-shaped on TPU, vectorized in interpret
-  mode. Same multiply count as the float kernel, none of its
-  ``h*(W+mx)`` sequential loop steps — that is where the measured
-  ``benchmarks/int_datapath.py`` throughput win comes from.
+* **In-kernel rolling shifts over base slabs.** The float kernel walks each
+  frame row with an ``O(h*(W+mx))``-step scalar prefix-sum loop (the
+  systolic FIFO in loop form). The int kernel instead stores only the
+  int8-quantized *base* slabs — the same circularly padded
+  ``(n_dt, h, TD + W - 1)`` rows the float geometry keeps — and
+  materializes every shifted view **inside** the grid step: one int32 MXU
+  matmul ``codesᵀ (W, h) @ slabs (h, TD + W - 1)`` folds the ``h`` reused
+  rolled products per column (summing over base rows *before* the shift is
+  valid because shift extraction is linear), then ``log2(W)`` vectorized
+  roll+select passes align row ``i`` by ``i`` so the per-column rolled
+  sums ``G (W, TD)`` fall out as diagonals, and the fragment windows are
+  ONE small integer matmul ``win_mask (mx, W) @ G``. The live set is
+  ``O(window)`` in ``W`` — base slabs + a bounded per-chunk scratch —
+  never the old all-``W`` pre-expanded ``(h*W, TD)`` operand whose VMEM
+  footprint grew linearly in ``W`` and overran the budget exactly at
+  deployment scale (h=16, W=4096, TD=512 -> 32 MB/tile; the new layout is
+  ~100 KB of slabs). :func:`assert_int_datapath_fits` enforces the bound,
+  and ``tests/test_workingset.py`` pins the regression: the expanded
+  layout's byte count sits *over* the budget at large ``W`` while this
+  layout stays under it.
+* **Sub-byte precisions.** ``packed=True`` consumes the int4 wire format
+  (two 4-bit codes per byte, :func:`repro.sensing.adc.pack_nibbles`) and
+  unpacks nibbles in-kernel — halved code traffic, int32 accumulation
+  unchanged. ``mode="binary"`` geometry sign-quantizes slabs to ±1 (scale
+  = mean |slab|, the L2-optimal 1-bit approximation) and class HVs to ±1
+  (norm ``sqrt(D)``): the XOR-popcount similarity of binarized HDC
+  expressed as the same int8 matmuls, enabling reduced-D operating points
+  (D-vs-AUC curve reported by ``benchmarks/int_datapath.py``).
 * **LSB cancellation.** The fragment projection is normalized by the
   window's L2 norm, so the ADC step size cancels:
   ``(LSB * acc) / (LSB * ||codes||) = acc / ||codes||``. Scores from the
@@ -36,8 +49,8 @@ Why the integer path is *structurally* different (not just a dtype swap):
   stored as int8 with a per-class scale; because the final score is a
   *cosine*, the class scale cancels against the class norm — the epilogue
   only ever needs the L2 norm of the *quantized* class vector. The only
-  approximation the int path introduces is int8 rounding of the slabs and
-  class tiles (AUC gap bounded in the benchmark ``--check``).
+  approximation the int path introduces is int8 (or ±1) rounding of the
+  slabs and class tiles (AUC gap bounded in the benchmark ``--check``).
 
 Accumulator discipline (all bounds checked by
 :func:`assert_int_datapath_fits` + hypothesis property tests):
@@ -45,15 +58,19 @@ Accumulator discipline (all bounds checked by
 * window sum-of-squares: exact int32 summed-area table of ``codes**2``
   (``<= H*W*(2^bits-1)^2``) — the float SAT would lose exactness past
   2^24;
-* fragment projection prefix sum: ``<= h*W*(2^bits-1)*127`` per entry —
-  int32 with orders of magnitude of headroom at 8-bit codes and paper
-  frame/window sizes.
+* fragment projection: every partial sum — matmul entries, rolled
+  diagonals, window aggregates — is ``<= h*w*(2^bits-1)*127`` in
+  magnitude: int32 with orders of magnitude of headroom at 8-bit codes
+  and paper frame/window sizes.
 
 Integer accumulation is associative, so the int path is **bitwise
 deterministic across runs** regardless of scheduling — asserted in CI.
+(It is also why this rewrite is score-for-score bit-identical to the old
+expanded-slab layout: same quantized int8 values, same exact integer sums,
+same float epilogue — the golden int8 fixtures did not move.)
 
 Precompute mirrors the float path's mutability split: class-independent
-:class:`IntScoreGeometry` (quantized expanded slabs, window mask, rotation
+:class:`IntScoreGeometry` (quantized base slabs, window mask, rotation
 gather) vs the jitted device-side :func:`retile_classes_int` /
 :func:`retile_classes_int_fleet` (classifier install = gather + int8
 quantize per class), so online adaptation never re-runs the host
@@ -81,40 +98,58 @@ INT32_MAX = 2**31 - 1
 #: representation sign-symmetric; -128 is never produced)
 _QMAX = 127
 
+#: static W-axis chunk of the in-kernel rolling-shift pass: bounds the
+#: int32 scratch at O(_W_CHUNK * (TD + _W_CHUNK)) independent of W
+_W_CHUNK = 128
+
+#: per-grid-step VMEM working-set budget the int geometry must fit (half a
+#: typical 16 MB TPU core VMEM, leaving room for double buffering). The old
+#: expanded-slab layout exceeds this at large W; the rolling-shift layout
+#: stays under it — see int_datapath_bounds / tests/test_workingset.py.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+#: geometry quantization modes: "int8" (symmetric 8-bit slabs) or "binary"
+#: (sign-quantized ±1 slabs and class HVs)
+INT_MODES = ("int8", "binary")
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class IntScoreGeometry:
     """Class-independent int-kernel precompute (see module docstring).
 
-    ``slab_mat`` is the *expanded shifted slab*:
-    ``slab_mat[dt, r*W + i, j] = q(slabs[dt, r, i + j])`` — all ``W``
-    cyclic shifts of every base row, int8-quantized with the shared
-    ``slab_scale``. Multiplying frame row ``r``'s code ``i`` against
-    ``slab_mat[dt, r*W + i, :]`` is the paper's reused rolled product;
-    ``win_mask[kx, i] = [kx*stride <= i < kx*stride + w]`` aggregates the
-    rolled sums into fragment windows as one small matmul.
+    ``slabs_q`` is the quantized **base** slab — the same circularly padded
+    ``(n_dt, h, TD + W - 1)`` layout as the float
+    :class:`~repro.kernels.sliding_scores.ScoreGeometry`, int8-quantized
+    with the shared ``slab_scale`` (``mode="int8"``) or sign-quantized to
+    ±1 with ``slab_scale = mean |slab|`` (``mode="binary"``). Every
+    shifted view ``slabs_q[dt, r, i + j]`` the projection needs is built
+    *inside* the kernel by rolling — nothing grows with ``W`` beyond the
+    ``W - 1`` halo columns. ``win_mask[kx, i] = [kx*stride <= i <
+    kx*stride + w]`` aggregates the rolled sums into fragment windows as
+    one small matmul.
     """
-    slab_mat: Array    # (n_dt, h*W, TD) int8 expanded shifted slabs
+    slabs_q: Array     # (n_dt, h, TD + W - 1) int8 quantized base slabs
     win_mask: Array    # (mx, W) int8 window-membership indicator
     bias_t: Array      # (n_dt, mx, TD) f32 pre-rotated RFF bias tiles
     idx: Array         # (n_dt, mx, TD) i32 rotation gather into a (D,) vec
-    slab_scale: Array  # () f32: slab ~= slab_mat * slab_scale
+    slab_scale: Array  # () f32: slab ~= slabs_q * slab_scale
     block_d: int = dataclasses.field(metadata={"static": True})
     w: int = dataclasses.field(metadata={"static": True})
     stride: int = dataclasses.field(metadata={"static": True})
+    mode: str = dataclasses.field(default="int8", metadata={"static": True})
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class IntScoreTiles:
-    """Geometry + int8 class tiles: the int kernel's full input bundle.
+    """Geometry + quantized class tiles: the int kernel's input bundle.
 
     ``cpos_t``/``cneg_t`` are ``(n_dt, mx, TD)`` int8 for a shared
-    classifier or ``(S, n_dt, mx, TD)`` (with ``(S,)`` norms) per-stream.
-    ``c*_norm`` is the L2 norm of the *quantized* class vector — the
-    per-class quantization scale cancels in the cosine epilogue, so it is
-    never stored.
+    classifier or ``(S, n_dt, mx, TD)`` (with ``(S,)`` norms) per-stream;
+    ±1-valued under ``geom.mode == "binary"``. ``c*_norm`` is the L2 norm
+    of the *quantized* class vector — the per-class quantization scale
+    cancels in the cosine epilogue, so it is never stored.
     """
     geom: IntScoreGeometry
     cpos_t: Array     # ([S,] n_dt, mx, TD) int8 positive class tiles
@@ -124,12 +159,33 @@ class IntScoreTiles:
 
 
 # ---------------------------------------------------------------------------
-# Accumulator bounds: the no-overflow contract of the int32 datapath
+# int4 wire format (two 4-bit codes per byte along the row axis)
 # ---------------------------------------------------------------------------
 
-def int_datapath_bounds(adc_bits: int, H: int, W: int, h: int, w: int
-                        ) -> dict:
-    """Worst-case int32 accumulator magnitudes of the integer datapath.
+def _unpack_nibbles_i32(packed: Array) -> Array:
+    """``(..., W/2)`` packed bytes -> ``(..., W)`` int32 4-bit codes.
+
+    The kernel-side twin of :func:`repro.sensing.adc.unpack_nibbles`
+    (low nibble first); parity between the two is pinned in
+    ``tests/test_adc_quantize.py``.
+    """
+    p = packed.astype(jnp.int32)
+    lo = jnp.bitwise_and(p, 0xF)
+    hi = jnp.right_shift(p, 4)
+    return jnp.concatenate([lo[..., None], hi[..., None]],
+                           axis=-1).reshape(*p.shape[:-1], -1)
+
+
+# ---------------------------------------------------------------------------
+# Bounds: the no-overflow AND fits-VMEM contract of the int datapath
+# ---------------------------------------------------------------------------
+
+def int_datapath_bounds(adc_bits: int, H: int, W: int, h: int, w: int,
+                        stride: int = 1, block_d: int = 512,
+                        packed: bool = False) -> dict:
+    """Worst-case int32 accumulators + VMEM working set of the datapath.
+
+    Accumulator magnitudes (exactness contract):
 
     * ``sumsq`` — the summed-area table of squared codes over a full
       frame (the window-norm pass);
@@ -137,24 +193,80 @@ def int_datapath_bounds(adc_bits: int, H: int, W: int, h: int, w: int
       with a max int8 slab entry.
 
     Both must stay below ``INT32_MAX`` for the path to be exact.
+
+    VMEM working set per grid step (scaling contract — the regression
+    guard for the expanded-slab blow-up this layout replaced):
+
+    * ``vmem_bytes`` — the rolling-shift layout: codes block + base slabs
+      ``h * (TD + W - 1)`` + the bounded ``O(_W_CHUNK * TD)`` roll
+      scratch + mask/bias/class/acc tiles. O(window) in ``W``.
+    * ``vmem_expanded_bytes`` — what the old all-``W`` pre-expanded
+      ``(h*W, TD)`` slab operand would have needed at the same config:
+      linear in ``W``.
+    * ``vmem_limit_bytes`` — the :data:`VMEM_BUDGET_BYTES` budget
+      ``vmem_bytes`` must not exceed.
+
+    ``stride``/``block_d`` default to the most conservative values
+    (``stride=1`` maximizes the window count ``mx``); pass the real ones
+    for a tight estimate. ``packed=True`` halves the code-block bytes
+    (the int4 wire format).
+
+    ``fits`` is the conjunction: accumulators exact AND working set under
+    budget.
     """
     cmax = (1 << adc_bits) - 1
     sumsq = H * W * cmax * cmax
     acc = h * w * cmax * _QMAX
+
+    td = block_d
+    mx = max((W - w) // stride + 1, 1)
+    wc = min(W, _W_CHUNK)
+    codes_bytes = H * (W // 2 if packed else W)           # uint8 wire codes
+    slab_bytes = h * (td + W - 1)                         # int8 base slabs
+    scratch_bytes = 3 * wc * (td + wc - 1) * 4            # P + roll + select
+    common = (codes_bytes + mx * W                        # codes + win_mask
+              + mx * td * 4                               # f32 bias tile
+              + 2 * mx * td                               # int8 class tiles
+              + mx * td * 4)                              # int32 acc
+    vmem = common + slab_bytes + scratch_bytes
+    vmem_expanded = common + h * W * td                   # old (h*W, TD) slab
+
     return {"sumsq": sumsq, "acc": acc, "int32_max": INT32_MAX,
-            "fits": max(sumsq, acc) <= INT32_MAX}
+            "vmem_bytes": vmem, "vmem_expanded_bytes": vmem_expanded,
+            "vmem_limit_bytes": VMEM_BUDGET_BYTES,
+            "fits": (max(sumsq, acc) <= INT32_MAX
+                     and vmem <= VMEM_BUDGET_BYTES)}
 
 
 def assert_int_datapath_fits(adc_bits: int, H: int, W: int, h: int,
-                             w: int) -> None:
-    """Raise unless every int32 accumulator of the datapath has headroom."""
-    b = int_datapath_bounds(adc_bits, H, W, h, w)
-    if not b["fits"]:
+                             w: int, stride: int = 1, block_d: int = 512,
+                             packed: bool = False) -> None:
+    """Raise unless the int datapath is exact AND fits the VMEM budget.
+
+    Two distinct failure modes, two distinct errors:
+
+    * int32 accumulator overflow (too many ADC bits for the window size)
+      — exactness would silently break;
+    * per-grid-step working set over :data:`VMEM_BUDGET_BYTES` — the
+      bound the old expanded-slab layout violated at large ``W`` (it
+      stored all ``W`` shifts as an ``(h*W, TD)`` operand); the
+      rolling-shift layout keeps the live set O(window), so tripping this
+      now means a genuinely oversized (window, tile) configuration.
+    """
+    b = int_datapath_bounds(adc_bits, H, W, h, w, stride=stride,
+                            block_d=block_d, packed=packed)
+    if max(b["sumsq"], b["acc"]) > INT32_MAX:
         raise ValueError(
-            f"int8 datapath would overflow int32 at adc_bits={adc_bits}, "
+            f"int datapath would overflow int32 at adc_bits={adc_bits}, "
             f"frame {H}x{W}, window {h}x{w}: worst-case accumulators "
             f"sumsq={b['sumsq']}, acc={b['acc']} exceed {INT32_MAX}; "
             f"use fewer ADC bits / smaller frames or precision='float32'")
+    if b["vmem_bytes"] > b["vmem_limit_bytes"]:
+        raise ValueError(
+            f"int datapath working set {b['vmem_bytes']} B exceeds the "
+            f"{b['vmem_limit_bytes']} B VMEM budget at frame {H}x{W}, "
+            f"window {h}x{w}, block_d={block_d}; shrink block_d or the "
+            f"frame width")
 
 
 # ---------------------------------------------------------------------------
@@ -167,24 +279,29 @@ def _quantize_sym(x: Array, scale: Array) -> Array:
 
 
 def precompute_geometry_int(B0: Array, b: Array, *, W: int, w: int,
-                            stride: int, block_d: int = 512
-                            ) -> IntScoreGeometry:
+                            stride: int, block_d: int = 512,
+                            mode: str = "int8") -> IntScoreGeometry:
     """Host-side, once per (model-geometry, frame-width).
 
     Builds on the float :func:`~repro.kernels.sliding_scores.
-    precompute_geometry` (same slab/bias/rotation content), then expands
-    the ``W`` shifts of every slab row into the int8 matmul operand.
+    precompute_geometry` (same slab/bias/rotation content), then quantizes
+    the base slabs *in place* — int8 at the shared max-abs scale
+    (``mode="int8"``), or sign-quantized ±1 at ``scale = mean |slab|``
+    (``mode="binary"``, the L2-optimal 1-bit scale a la XNOR-Net — it
+    keeps the normalized projection on the float path's scale, which the
+    RFF nonlinearity is sensitive to). No shift is ever materialized here:
+    the kernel rolls them out per grid step.
     """
+    if mode not in INT_MODES:
+        raise ValueError(f"mode must be one of {INT_MODES}, got {mode!r}")
     geom = _ss.precompute_geometry(B0, b, W=W, w=w, stride=stride,
                                    block_d=block_d)
-    n_dt, h, _ = geom.slabs.shape
-    td = geom.block_d
-
-    # slab_mat[dt, r*W + i, j] = slabs[dt, r, i + j]
-    shift_idx = jnp.arange(W)[:, None] + jnp.arange(td)[None, :]  # (W, TD)
-    expanded = geom.slabs[:, :, shift_idx]            # (n_dt, h, W, TD)
-    scale = jnp.maximum(jnp.max(jnp.abs(geom.slabs)), 1e-12) / _QMAX
-    slab_mat = _quantize_sym(expanded, scale).reshape(n_dt, h * W, td)
+    if mode == "binary":
+        scale = jnp.maximum(jnp.mean(jnp.abs(geom.slabs)), 1e-12)
+        slabs_q = jnp.where(geom.slabs >= 0, 1, -1).astype(jnp.int8)
+    else:
+        scale = jnp.maximum(jnp.max(jnp.abs(geom.slabs)), 1e-12) / _QMAX
+        slabs_q = _quantize_sym(geom.slabs, scale)
 
     # win_mask[kx, i] = [kx*stride <= i < kx*stride + w]
     mx = (W - w) // stride + 1
@@ -192,19 +309,25 @@ def precompute_geometry_int(B0: Array, b: Array, *, W: int, w: int,
     kx = jnp.arange(mx)[:, None] * stride
     win_mask = ((i >= kx) & (i < kx + w)).astype(jnp.int8)  # (mx, W)
 
-    return IntScoreGeometry(slab_mat=slab_mat, win_mask=win_mask,
+    return IntScoreGeometry(slabs_q=slabs_q, win_mask=win_mask,
                             bias_t=geom.bias_t, idx=geom.idx,
                             slab_scale=scale.astype(jnp.float32),
-                            block_d=td, w=w, stride=stride)
+                            block_d=geom.block_d, w=w, stride=stride,
+                            mode=mode)
 
 
-def _quantize_class(c: Array) -> tuple[Array, Array]:
-    """Per-class int8 quantization: ``(codes (D,) int8, ||codes||_2 f32)``.
+def _quantize_class(c: Array, mode: str = "int8") -> tuple[Array, Array]:
+    """Per-class quantization: ``(codes (D,) int8, ||codes||_2 f32)``.
 
-    The scale is *not* returned — it cancels in the cosine epilogue.
+    ``mode="int8"``: symmetric int8; ``mode="binary"``: sign-quantized ±1
+    (norm ``sqrt(D)``). The scale is *not* returned — it cancels in the
+    cosine epilogue either way.
     """
-    scale = jnp.maximum(jnp.max(jnp.abs(c)), 1e-12) / _QMAX
-    q = _quantize_sym(c, scale)
+    if mode == "binary":
+        q = jnp.where(c >= 0, 1, -1).astype(jnp.int8)
+    else:
+        scale = jnp.maximum(jnp.max(jnp.abs(c)), 1e-12) / _QMAX
+        q = _quantize_sym(c, scale)
     return q, jnp.linalg.norm(q.astype(jnp.float32))
 
 
@@ -213,12 +336,15 @@ def retile_classes_int(geom: IntScoreGeometry, class_hvs: Array
                        ) -> IntScoreTiles:
     """Device-side classifier (re-)tiling: ``(2, D)`` -> int8 tiles.
 
-    One gather + int8 quantize per class — the entire cost of installing
-    an updated classifier into the int scoring kernel (the online-learning
-    hot path never re-runs :func:`precompute_geometry_int`).
+    One gather + quantize per class (int8 or ±1, per ``geom.mode``) — the
+    entire cost of installing an updated classifier into the int scoring
+    kernel (the online-learning hot path never re-runs
+    :func:`precompute_geometry_int`).
     """
-    qpos, npos = _quantize_class(class_hvs[1].astype(jnp.float32))
-    qneg, nneg = _quantize_class(class_hvs[0].astype(jnp.float32))
+    qpos, npos = _quantize_class(class_hvs[1].astype(jnp.float32),
+                                 geom.mode)
+    qneg, nneg = _quantize_class(class_hvs[0].astype(jnp.float32),
+                                 geom.mode)
     return IntScoreTiles(geom=geom, cpos_t=qpos[geom.idx],
                          cneg_t=qneg[geom.idx],
                          cpos_norm=npos, cneg_norm=nneg)
@@ -229,8 +355,8 @@ def retile_classes_int_fleet(geom: IntScoreGeometry, class_hvs: Array
                              ) -> IntScoreTiles:
     """Per-stream classifier tiling: ``(S, 2, D)`` -> stacked int8 tiles."""
     def one(chvs):
-        qpos, npos = _quantize_class(chvs[1].astype(jnp.float32))
-        qneg, nneg = _quantize_class(chvs[0].astype(jnp.float32))
+        qpos, npos = _quantize_class(chvs[1].astype(jnp.float32), geom.mode)
+        qneg, nneg = _quantize_class(chvs[0].astype(jnp.float32), geom.mode)
         return qpos[geom.idx], qneg[geom.idx], npos, nneg
 
     cpos_t, cneg_t, npos, nneg = jax.vmap(one)(class_hvs)
@@ -239,11 +365,11 @@ def retile_classes_int_fleet(geom: IntScoreGeometry, class_hvs: Array
 
 
 def precompute_tiles_int(B0: Array, b: Array, class_hvs: Array, *, W: int,
-                         w: int, stride: int, block_d: int = 512
-                         ) -> IntScoreTiles:
-    """Host-side all-in-one: geometry + int8 class tiles."""
+                         w: int, stride: int, block_d: int = 512,
+                         mode: str = "int8") -> IntScoreTiles:
+    """Host-side all-in-one: geometry + quantized class tiles."""
     geom = precompute_geometry_int(B0, b, W=W, w=w, stride=stride,
-                                   block_d=block_d)
+                                   block_d=block_d, mode=mode)
     return retile_classes_int(geom, class_hvs)
 
 
@@ -278,33 +404,70 @@ def window_norms_codes_batch(codes: Array, h: int, w: int,
 # The kernel
 # ---------------------------------------------------------------------------
 
-def _int_window_acc(block, slab_mat, win_mask, *, h: int, W: int,
+def _roll_diagonals(p: Array, rows: int, td: int) -> Array:
+    """Extract ``g[l, j] = p[l, l + j]`` for ``j < td`` by rolling.
+
+    ``log2(rows)`` vectorized roll+select passes align row ``l`` left by
+    ``l`` (log-doubling over the bits of ``l``); composition of circular
+    rolls is the circular roll of the sum, and ``l + j <= (rows - 1) +
+    (td - 1) < p.shape[1]``, so no wrapped element is ever kept. Plain
+    concatenate/where — TPU- and interpret-mode-safe, no scalar loops.
+    """
+    width = p.shape[1]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 0)
+    shift = 1
+    while shift < rows:
+        rolled = jnp.concatenate([p[:, shift:], p[:, :shift]], axis=1)
+        p = jnp.where((row_iota & shift) != 0, rolled, p)
+        shift *= 2
+    return p[:, :td]
+
+
+def _int_window_acc(block, slabs_q, win_mask, *, h: int, W: int,
                     td: int) -> Array:
     """Shared int32 projection core: ``(h, W) codes -> (mx, TD)`` sums.
 
-    The paper's computation reuse with zero scalar loops: the ``h``
-    elementwise rolled products against the pre-shifted int8 slabs fold
-    into the per-column rolled sums ``G (W, TD)`` — each code multiplied
-    once per base row, never materializing ``(h, W, TD)`` — then ONE
-    small integer matmul against the window indicator aggregates every
-    fragment. Exact int32 arithmetic throughout.
+    The paper's computation reuse with an O(window) live set: summing over
+    base rows commutes with shift extraction, so ONE int32 matmul
+    ``codesᵀ @ slabs_q`` produces ``P[i, p] = Σ_r codes[r, i] *
+    slabs_q[r, p]``; rolling row ``i`` left by ``i``
+    (:func:`_roll_diagonals`) yields the per-column rolled sums
+    ``G[i, j] = P[i, i + j]`` — each code multiplied once per base row,
+    never materializing ``(h, W, TD)`` or the old pre-expanded
+    ``(h*W, TD)`` slab — then ONE small integer matmul against the window
+    indicator aggregates every fragment. The ``W`` axis is chunked
+    statically (:data:`_W_CHUNK`) so the int32 scratch stays bounded
+    regardless of frame width. Exact int32 arithmetic throughout, in a
+    fixed association order (bitwise deterministic, and bit-identical to
+    the retired expanded-slab accumulation).
     """
-    slab3 = slab_mat.reshape(h, W, td)                    # int8 (lazy)
-    codes = block.astype(jnp.int32)
-    g = codes[0][:, None] * slab3[0]                      # (W, TD) int32
-    for r in range(1, h):
-        g = g + codes[r][:, None] * slab3[r]
-    return jax.lax.dot_general(
-        win_mask.astype(jnp.int32), g, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)                 # (mx, TD)
+    codes = block.astype(jnp.int32)                       # (h, W)
+    slabs = slabs_q.astype(jnp.int32)                     # (h, TD + W - 1)
+    mask = win_mask.astype(jnp.int32)                     # (mx, W)
+    acc = None
+    for c0 in range(0, W, _W_CHUNK):
+        cw = min(_W_CHUNK, W - c0)
+        # P[l, p] = sum_r codes[r, c0 + l] * slabs[r, c0 + p]
+        p = jax.lax.dot_general(
+            codes[:, c0:c0 + cw], slabs[:, c0:c0 + td + cw - 1],
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)             # (cw, td+cw-1)
+        g = _roll_diagonals(p, cw, td)                    # (cw, td)
+        part = jax.lax.dot_general(
+            mask[:, c0:c0 + cw], g, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)             # (mx, td)
+        acc = part if acc is None else acc + part
+    return acc
 
 
 def _score_kernel_int(codes_ref, slab_ref, mask_ref, bias_ref, cpos_ref,
                       cneg_ref, norm_ref, dpos_ref, dneg_ref, qq_ref, *,
                       h: int, stride: int, w: int, W: int, mx: int,
-                      td: int, nonlinearity: NonLin):
+                      td: int, nonlinearity: NonLin, packed: bool):
     ky = pl.program_id(1)
-    block = codes_ref[0, pl.ds(ky * stride, h), :]        # (h, W) codes
+    block = codes_ref[0, pl.ds(ky * stride, h), :]        # (h, W[/2]) codes
+    if packed:
+        block = _unpack_nibbles_i32(block)                # (h, W) 4-bit
     acc = _int_window_acc(block, slab_ref[0], mask_ref[...],
                           h=h, W=W, td=td)                # (mx, TD) int32
 
@@ -342,33 +505,44 @@ def _cosine_epilogue(dpos, dneg, qq, tiles, per_stream: bool, C: int):
             - dneg / (qn * jnp.maximum(tiles.cneg_norm, 1e-9)))
 
 
-@functools.partial(jax.jit, static_argnames=("h", "w", "stride",
-                                             "nonlinearity", "interpret",
-                                             "frames_per_stream"))
-def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
-                              w: int, stride: int,
-                              nonlinearity: NonLin = "rff",
-                              interpret: bool = False,
-                              frames_per_stream: int | None = None
-                              ) -> Array:
-    """(N, H, W) integer ADC codes -> (N, my, mx) score maps, ONE launch.
-
-    The fused encode->score entry point of the int datapath: raw codes in,
-    float score maps out — no float frame is ever materialized. Grid and
-    BlockSpec layout mirror the float :func:`~repro.kernels.
-    sliding_scores.fragment_scores_batch`, including the per-stream
-    class-tile indexing (``frames_per_stream``) used by adapting fleets.
-    """
+def _check_codes_integer(codes: Array) -> None:
     if not jnp.issubdtype(codes.dtype, jnp.integer):
         raise TypeError(f"int datapath consumes integer ADC codes, got "
                         f"{codes.dtype} — use adc.quantize_codes/pack_codes"
                         f" (or precision='float32')")
-    N, H, W = codes.shape
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w", "stride",
+                                             "nonlinearity", "interpret",
+                                             "frames_per_stream", "packed"))
+def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
+                              w: int, stride: int,
+                              nonlinearity: NonLin = "rff",
+                              interpret: bool = False,
+                              frames_per_stream: int | None = None,
+                              packed: bool = False) -> Array:
+    """(N, H, W) integer ADC codes -> (N, my, mx) score maps, ONE launch.
+
+    The fused encode->score entry point of the int datapath: raw codes in,
+    float score maps out — no float frame is ever materialized, and no
+    shifted slab either (rolled out in-kernel, see :func:`_int_window_acc`).
+    With ``packed=True`` the input is the int4 wire format ``(N, H, W/2)``
+    (two codes per byte, low nibble first); nibbles are unpacked inside
+    the kernel, so the HBM->VMEM code traffic is halved. Grid and
+    BlockSpec layout mirror the float :func:`~repro.kernels.
+    sliding_scores.fragment_scores_batch`, including the per-stream
+    class-tile indexing (``frames_per_stream``) used by adapting fleets.
+    """
+    _check_codes_integer(codes)
+    N, H, Wc = codes.shape
+    W = Wc * 2 if packed else Wc
     my = (H - h) // stride + 1
     mx = (W - w) // stride + 1
     geom = tiles.geom
-    n_dt, hw, td = geom.slab_mat.shape
-    assert hw == h * W and td == geom.block_d, (geom.slab_mat.shape, h, W)
+    n_dt, gh, slab_len = geom.slabs_q.shape
+    td = geom.block_d
+    assert gh == h and slab_len == td + W - 1, (geom.slabs_q.shape, h, W)
+    assert geom.win_mask.shape == (mx, W), (geom.win_mask.shape, mx, W)
     assert geom.w == w and geom.stride == stride
 
     per_stream = tiles.cpos_t.ndim == 4
@@ -391,18 +565,21 @@ def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
 
     # LSB-free normalization with the slab scale folded in:
     #   s_n = (acc * slab_scale) / ||codes||  =  acc / (||codes|| / scale)
-    norms = window_norms_codes_batch(codes, h, w, stride)     # (N, my, mx)
+    full = _unpack_nibbles_i32(codes) if packed else codes
+    norms = window_norms_codes_batch(full, h, w, stride)      # (N, my, mx)
     norms = jnp.maximum(norms, 1e-8) / geom.slab_scale
 
     kern = functools.partial(_score_kernel_int, h=h, stride=stride, w=w,
-                             W=W, mx=mx, td=td, nonlinearity=nonlinearity)
+                             W=W, mx=mx, td=td, nonlinearity=nonlinearity,
+                             packed=packed)
 
     dpos, dneg, qq = pl.pallas_call(
         kern,
         grid=(N, my, n_dt),
         in_specs=[
-            pl.BlockSpec((1, H, W), lambda n, i, j: (n, 0, 0)),    # codes
-            pl.BlockSpec((1, hw, td), lambda n, i, j: (j, 0, 0)),  # slabs
+            pl.BlockSpec((1, H, Wc), lambda n, i, j: (n, 0, 0)),   # codes
+            pl.BlockSpec((1, h, slab_len),
+                         lambda n, i, j: (j, 0, 0)),               # slabs
             pl.BlockSpec((mx, W), lambda n, i, j: (0, 0)),         # mask
             pl.BlockSpec((1, mx, td), lambda n, i, j: (j, 0, 0)),  # bias
             class_spec,                                            # cpos
@@ -419,7 +596,7 @@ def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(codes, geom.slab_mat, geom.win_mask, geom.bias_t, cpos_t, cneg_t,
+    )(codes, geom.slabs_q, geom.win_mask, geom.bias_t, cpos_t, cneg_t,
       norms)
 
     return _cosine_epilogue(dpos, dneg, qq, tiles, per_stream, C)
@@ -434,15 +611,16 @@ def _int_scores_shared(codes, geom: IntScoreGeometry, cpos_t, cneg_t, *,
                        nonlinearity: NonLin):
     """Shared-classifier jnp int path -> ``(dpos, dneg, qq) (N, my, mx)``.
 
-    Same quantized operands and the same int32 accumulation as the kernel;
-    only the (float) epilogue can differ by rounding. Materializes
+    Same quantized operands and the same int32 accumulation as the kernel
+    (the identical :func:`_int_window_acc` core, vmapped); only the
+    (float) epilogue can differ by rounding. Materializes
     ``(N, my, mx, D)`` projections — the validation/CPU path, not the
     deployment one.
     """
     N, H, W = codes.shape
     my = (H - h) // stride + 1
     mx = (W - w) // stride + 1
-    n_dt = geom.slab_mat.shape[0]
+    n_dt = geom.slabs_q.shape[0]
     td = geom.block_d
     ky = jnp.arange(my) * stride
     blocks = codes[:, ky[:, None] + jnp.arange(h)[None, :], :]  # (N,my,h,W)
@@ -450,7 +628,7 @@ def _int_scores_shared(codes, geom: IntScoreGeometry, cpos_t, cneg_t, *,
     # same reuse core as the kernel, vmapped over (frame, row-band, D-tile)
     acc = jax.vmap(jax.vmap(lambda blk: jax.vmap(
         lambda slab: _int_window_acc(blk, slab, geom.win_mask, h=h, W=W,
-                                     td=td))(geom.slab_mat)))(
+                                     td=td))(geom.slabs_q)))(
                                          blocks)   # (N, my, n_dt, mx, TD)
     acc = acc.transpose(0, 1, 3, 2, 4)             # (N, my, mx, n_dt, TD)
     norms = window_norms_codes_batch(codes, h, w, stride)
@@ -468,21 +646,23 @@ def _int_scores_shared(codes, geom: IntScoreGeometry, cpos_t, cneg_t, *,
 
 @functools.partial(jax.jit, static_argnames=("h", "w", "stride",
                                              "nonlinearity",
-                                             "frames_per_stream"))
+                                             "frames_per_stream", "packed"))
 def fragment_scores_batch_int_ref(codes: Array, tiles: IntScoreTiles, *,
                                   h: int, w: int, stride: int,
                                   nonlinearity: NonLin = "rff",
-                                  frames_per_stream: int | None = None
-                                  ) -> Array:
+                                  frames_per_stream: int | None = None,
+                                  packed: bool = False) -> Array:
     """Pure-jnp twin of :func:`fragment_scores_batch_int`.
 
-    Identical quantized operands and int32 accumulation; serves as the
-    parity oracle for the kernel and as the ``backend="jnp"`` execution of
-    ``precision="int8"`` in the streaming runtimes.
+    Identical quantized operands and int32 accumulation (``packed`` codes
+    are unpacked up front — nibble unpacking is value-exact, so the
+    accumulation order is untouched); serves as the parity oracle for the
+    kernel and as the ``backend="jnp"`` execution of the integer
+    precisions in the streaming runtimes.
     """
-    if not jnp.issubdtype(codes.dtype, jnp.integer):
-        raise TypeError(f"int datapath consumes integer ADC codes, got "
-                        f"{codes.dtype}")
+    _check_codes_integer(codes)
+    if packed:
+        codes = _unpack_nibbles_i32(codes)
     geom = tiles.geom
     per_stream = tiles.cpos_t.ndim == 4
     if per_stream:

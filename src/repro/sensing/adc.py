@@ -10,9 +10,10 @@ Two representations of the same capture:
 * ``quantize``       — the float *reconstruction* ``codes * LSB`` the
   float32 datapath consumes;
 * ``quantize_codes`` (+ :func:`pack_codes`) — the raw integer ADC codes the
-  ``precision="int8"`` datapath consumes untouched (the paper's FPGA
-  front-end never materializes floats; see
-  ``repro.kernels.sliding_scores_int``).
+  integer precisions consume untouched (the paper's FPGA front-end never
+  materializes floats; see ``repro.kernels.sliding_scores_int``). The
+  ``"int4"`` precision additionally rides the two-codes-per-byte wire
+  format (:func:`pack_nibbles` / :func:`unpack_nibbles`).
 """
 
 from __future__ import annotations
@@ -21,16 +22,26 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
 #: full-scale voltage of the simulated converter (shared by both paths)
 V_MAX = 1.5
 
-#: the two datapath precisions of the scoring hot path (ISSUE 4):
-#: "float32" consumes ADC reconstructions, "int8" consumes raw ADC codes
-#: (int32 accumulation, float only at the similarity epilogue)
-PRECISIONS = ("float32", "int8")
+#: the datapath precisions of the scoring hot path. "float32" consumes ADC
+#: reconstructions; the rest consume raw ADC codes (int32 accumulation,
+#: float only at the similarity epilogue — the rolling-shift kernel in
+#: ``repro.kernels.sliding_scores_int``): "int8" quantizes slabs/classes to
+#: int8, "int4" additionally packs two 4-bit codes per wire byte (unpacked
+#: in-kernel, adc_bits <= 4), "binary" sign-quantizes slabs and class HVs
+#: to ±1 (XOR-popcount-style similarity as int8 matmuls, reduced-D
+#: operating points)
+PRECISIONS = ("float32", "int8", "int4", "binary")
+
+#: the precisions that run the integer-code datapath (everything except
+#: the float reconstruction path)
+INT_PRECISIONS = ("int8", "int4", "binary")
 
 
 def lsb(bits: int, v_max: float = V_MAX) -> float:
@@ -92,17 +103,55 @@ def unpack_codes(packed: Array) -> Array:
     return packed.astype(jnp.int32)
 
 
+@jax.jit
+def pack_nibbles(codes: Array) -> Array:
+    """``(..., W)`` 4-bit codes -> ``(..., W/2)`` uint8, two per byte.
+
+    The ``precision="int4"`` wire format: adjacent row pairs share a byte
+    (low nibble first), halving code memory traffic below what
+    :func:`pack_codes` reaches. Codes must already be 4-bit
+    (:func:`check_codes_range` guards the entry points) and the row width
+    even. The kernel unpacks nibbles in-place
+    (``sliding_scores_int._unpack_nibbles_i32`` — parity pinned in
+    ``tests/test_adc_quantize.py``); :func:`unpack_nibbles` is the host
+    inverse.
+    """
+    if codes.shape[-1] % 2:
+        raise ValueError(
+            f"int4 nibble packing needs an even row width, got "
+            f"{codes.shape[-1]} — pad or crop the frame")
+    c = codes.astype(jnp.uint8)
+    return c[..., 0::2] | (c[..., 1::2] << 4)
+
+
+@jax.jit
+def unpack_nibbles(packed: Array) -> Array:
+    """``(..., W/2)`` packed bytes -> ``(..., W)`` int32 (exact inverse)."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = p >> 4
+    return jnp.concatenate([lo[..., None], hi[..., None]],
+                           axis=-1).reshape(*p.shape[:-1], -1)
+
+
 def check_codes_range(codes: Array, bits: int) -> None:
     """Reject codes outside ``[0, 2^bits - 1]`` (concrete values only).
 
     Packing such codes would silently wrap modulo 256 and the int32
     overflow bounds would be checked against the wrong depth — every
     entry point that accepts pre-converted integer codes calls this
-    before trusting them. A no-op under tracing (shapes-only contexts).
+    before trusting them. This sits on the streaming hot path, so the
+    min and max are fused into ONE device reduction fetched with a
+    single device->host sync (not two blocking ``int()`` pulls). A
+    no-op on empty arrays and under tracing (shapes-only contexts).
     """
-    if isinstance(codes, jax.core.Tracer):
+    if codes.size == 0:
         return
-    lo, hi = int(codes.min()), int(codes.max())
+    extrema = jnp.stack([jnp.min(codes), jnp.max(codes)])
+    try:
+        lo, hi = (int(v) for v in np.asarray(extrema))
+    except jax.errors.TracerArrayConversionError:
+        return
     if lo < 0 or hi > (1 << bits) - 1:
         raise ValueError(
             f"integer input holds codes in [{lo}, {hi}], outside the "

@@ -134,8 +134,8 @@ def fleet_report(fired, gated, labels,
     LP-converted — exactly what the capture log degenerates to in
     open-loop mode). The baseline is the conventional always-on pipeline
     on every stream. ``precision`` is the datapath the gate actually ran
-    on — ``"int8"`` bills the always-on HDC work at the integer path's
-    reduced cost.
+    on — the integer precisions bill the always-on HDC work at their
+    reduced per-precision cost (``EnergyParams.hdc_*_factor``).
     """
     params = params or energy.EnergyParams()
     stats = stats_from_batch(fired, gated, labels)
@@ -211,9 +211,13 @@ class FleetRunner:
         if precision not in adc_sim.PRECISIONS:
             raise ValueError(f"precision must be one of "
                              f"{adc_sim.PRECISIONS}, got {precision!r}")
-        if precision == "int8" and adc_bits is None:
-            raise ValueError('precision="int8" consumes ADC codes: set '
-                             "adc_bits (the simulated converter's depth)")
+        if precision in adc_sim.INT_PRECISIONS and adc_bits is None:
+            raise ValueError(f'precision="{precision}" consumes ADC codes: '
+                             "set adc_bits (the simulated converter's "
+                             "depth)")
+        if precision == "int4" and adc_bits is not None and adc_bits > 4:
+            raise ValueError(f'precision="int4" packs two codes per byte, '
+                             f"so adc_bits must be <= 4 (got {adc_bits})")
         self.precision = precision
         self.model = model
         self.config = config or ControllerConfig()
@@ -306,7 +310,8 @@ class FleetRunner:
     def _ensure_tiles(self, W: int):
         """Frozen-path tile cache, keyed on (width, class-hv identity)."""
         from repro.kernels import ops as kops
-        retile = (kops.retile_classes_int if self.precision == "int8"
+        retile = (kops.retile_classes_int
+                  if self.precision in adc_sim.INT_PRECISIONS
                   else kops.retile_classes)
         chvs = self._state.class_hvs
         if (self._tiles is None or self._tiles[0] != W
@@ -317,7 +322,7 @@ class FleetRunner:
     @property
     def _adc_lsb(self) -> float:
         return (adc_sim.lsb(self.adc_bits)
-                if self.precision == "int8" else 1.0)
+                if self.precision in adc_sim.INT_PRECISIONS else 1.0)
 
     @property
     def capture_log(self) -> CaptureLog:
@@ -402,10 +407,13 @@ class FleetRunner:
             raise ValueError(f"fleet size changed: carried state has "
                              f"{self._state.holds.shape[0]} streams, "
                              f"got {S}")
-        if self.precision == "int8":
+        if self.precision in adc_sim.INT_PRECISIONS:
             from repro.kernels import ops as kops
             kops.assert_int_datapath_fits(self.adc_bits, *frames.shape[-2:],
-                                          self.model.h, self.model.w)
+                                          self.model.h, self.model.w,
+                                          stride=self.model.stride,
+                                          block_d=self.block_d,
+                                          packed=self.precision == "int4")
             if jnp.issubdtype(frames.dtype, jnp.integer):
                 # already-converted codes: concrete range check + pack
                 # (sigma forwarded so configured noise can't silently
@@ -430,7 +438,8 @@ class FleetRunner:
         self._n_seen += n
 
         m = self.model
-        if self.backend == "pallas" or self.precision == "int8":
+        if (self.backend == "pallas"
+                or self.precision in adc_sim.INT_PRECISIONS):
             tiles = (self._ensure_geom(frames.shape[-1])
                      if self.adapt is not None
                      else self._ensure_tiles(frames.shape[-1]))

@@ -144,7 +144,7 @@ def _noisy_capture(frames: Array, sigma: float, key: Array | None,
 
 def adc_view_codes(frames: Array, bits: int, *, sigma: float = 0.0,
                    key: Array | None = None, start_index: int = 0) -> Array:
-    """Raw integer ADC codes of ``(N, H, W)`` frames (the int8 datapath).
+    """Raw integer ADC codes of ``(N, H, W)`` frames (the int datapath).
 
     The codes twin of :func:`adc_view` — same capture (identical noise
     keying by absolute frame index, identical quantizer), but the output
@@ -335,15 +335,19 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     last *valid* frame. ``labels`` is ``(S, C)`` i32 — only consumed in
     ``adapt.mode == "label"`` (pass zeros otherwise).
 
-    With ``precision="int8"`` the ``frames`` argument is the *integer ADC
-    code* super-chunk (from :func:`adc_view_codes`) and ``tiles`` the int
-    precompute (:class:`~repro.kernels.sliding_scores_int.IntScoreTiles`,
-    or the int geometry when adapting) — on BOTH backends: the jnp
-    execution of the int path is the quantized-operand oracle
+    With an integer precision (``"int8"``, ``"int4"``, ``"binary"``) the
+    ``frames`` argument is the *integer ADC code* super-chunk (from
+    :func:`adc_view_codes`) and ``tiles`` the int precompute
+    (:class:`~repro.kernels.sliding_scores_int.IntScoreTiles`, or the int
+    geometry when adapting) — on BOTH backends: the jnp execution of the
+    int path is the quantized-operand oracle
     ``fragment_scores_batch_int_ref``, so jnp==pallas parity holds per
-    precision. ``adc_lsb`` (static; ``v_max/levels`` of the converter)
-    only matters to the online-learning re-encode, which dequantizes the
-    top fragment crop — scoring itself is LSB-free.
+    precision. ``"int4"`` codes are nibble-packed here at the kernel
+    boundary (two per byte, unpacked in-kernel) — everything outside the
+    scorer, including the adapt re-encode, sees plain codes. ``adc_lsb``
+    (static; ``v_max/levels`` of the converter) only matters to the
+    online-learning re-encode, which dequantizes the top fragment crop —
+    scoring itself is LSB-free.
 
     ``decim`` switches on the *closed capture loop*: ``None`` (default)
     is the open-loop step — every valid frame is LP-converted and the
@@ -365,7 +369,7 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     class_hvs = state.class_hvs
     per_stream = adapt is not None and adapt.scope == "per-stream"
 
-    if precision == "int8":
+    if precision in adc_sim.INT_PRECISIONS:
         from repro.kernels import ops as kops
         from repro.kernels import sliding_scores_int as ssi
         if adapt is None:
@@ -374,16 +378,20 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
             ktiles = kops.retile_classes_int_fleet(tiles, class_hvs)
         else:
             ktiles = kops.retile_classes_int(tiles, class_hvs)
+        packed = precision == "int4"
+        kframes = adc_sim.pack_nibbles(frames) if packed else frames
         if backend == "pallas":
             maps = kops.fragment_score_map_fleet_int(
-                frames, class_hvs, B0, b, h=h, w=w, stride=stride,
-                nonlinearity=nonlinearity, tiles=ktiles)     # (S,C,my,mx)
+                kframes, class_hvs, B0, b, h=h, w=w, stride=stride,
+                nonlinearity=nonlinearity, tiles=ktiles,
+                packed=packed)                               # (S,C,my,mx)
         else:
             fps = C if ktiles.cpos_t.ndim == 4 else None
             maps = ssi.fragment_scores_batch_int_ref(
-                frames.reshape(S * C, H, W), ktiles, h=h, w=w,
-                stride=stride, nonlinearity=nonlinearity,
-                frames_per_stream=fps).reshape(S, C, my, mx)
+                kframes.reshape(S * C, H, kframes.shape[-1]), ktiles,
+                h=h, w=w, stride=stride, nonlinearity=nonlinearity,
+                frames_per_stream=fps,
+                packed=packed).reshape(S, C, my, mx)
     elif backend == "pallas":
         from repro.kernels import ops as kops
         if adapt is None:
@@ -441,7 +449,7 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
         # makes the LSB cancel, so this matches the float path's samples
         # up to int8 rounding of the codes themselves
         obs = (frames.astype(jnp.float32) * jnp.float32(adc_lsb)
-               if precision == "int8" else frames)
+               if precision in adc_sim.INT_PRECISIONS else frames)
         hv = _top_fragment_hvs(obs, maps, B0, b, h=h, w=w,
                                stride=stride, mx=mx,
                                nonlinearity=nonlinearity)    # (S, C, D)
@@ -495,12 +503,16 @@ super_chunk_step = jax.jit(
 def model_geometry(model: HyperSenseModel, W: int, block_d: int,
                    precision: str = "float32"):
     """Class-independent geometry for ``model`` on width-``W`` frames
-    (:class:`ScoreGeometry`, or the int8 twin for the integer datapath)."""
+    (:class:`ScoreGeometry`, or the int twin for the integer precisions —
+    ±1 sign-quantized slabs under ``precision="binary"``)."""
     from repro.kernels import ops as kops
-    fn = (kops.precompute_geometry_int if precision == "int8"
-          else kops.precompute_geometry)
-    return fn(model.B0, model.b, W=W, w=model.w, stride=model.stride,
-              block_d=block_d)
+    if precision in adc_sim.INT_PRECISIONS:
+        return kops.precompute_geometry_int(
+            model.B0, model.b, W=W, w=model.w, stride=model.stride,
+            block_d=block_d,
+            mode="binary" if precision == "binary" else "int8")
+    return kops.precompute_geometry(model.B0, model.b, W=W, w=model.w,
+                                    stride=model.stride, block_d=block_d)
 
 
 def model_tiles(model: HyperSenseModel, W: int, block_d: int,
@@ -508,7 +520,7 @@ def model_tiles(model: HyperSenseModel, W: int, block_d: int,
     """Tile precompute for ``model`` on width-``W`` frames (per precision)."""
     from repro.kernels import ops as kops
     geom = model_geometry(model, W, block_d, precision)
-    fn = (kops.retile_classes_int if precision == "int8"
+    fn = (kops.retile_classes_int if precision in adc_sim.INT_PRECISIONS
           else kops.retile_classes)
     return fn(geom, model.class_hvs)
 
@@ -563,9 +575,13 @@ class StreamRunner:
         if precision not in adc_sim.PRECISIONS:
             raise ValueError(f"precision must be one of "
                              f"{adc_sim.PRECISIONS}, got {precision!r}")
-        if precision == "int8" and adc_bits is None:
-            raise ValueError('precision="int8" consumes ADC codes: set '
-                             "adc_bits (the simulated converter's depth)")
+        if precision in adc_sim.INT_PRECISIONS and adc_bits is None:
+            raise ValueError(f'precision="{precision}" consumes ADC codes: '
+                             "set adc_bits (the simulated converter's "
+                             "depth)")
+        if precision == "int4" and adc_bits is not None and adc_bits > 4:
+            raise ValueError(f'precision="int4" packs two codes per byte, '
+                             f"so adc_bits must be <= 4 (got {adc_bits})")
         if adapt is not None and adapt.scope == "per-stream":
             raise ValueError('scope="per-stream" is a FleetRunner mode; '
                              "a StreamRunner has exactly one stream — "
@@ -638,7 +654,8 @@ class StreamRunner:
     def _ensure_tiles(self, W: int):
         """Frozen-path tile cache, keyed on (width, class-hv identity)."""
         from repro.kernels import ops as kops
-        retile = (kops.retile_classes_int if self.precision == "int8"
+        retile = (kops.retile_classes_int
+                  if self.precision in adc_sim.INT_PRECISIONS
                   else kops.retile_classes)
         chvs = self._state.class_hvs
         if (self._tiles is None or self._tiles[0] != W
@@ -649,7 +666,7 @@ class StreamRunner:
     @property
     def _adc_lsb(self) -> float:
         return (adc_sim.lsb(self.adc_bits)
-                if self.precision == "int8" else 1.0)
+                if self.precision in adc_sim.INT_PRECISIONS else 1.0)
 
     @property
     def capture_log(self) -> CaptureLog:
@@ -685,10 +702,11 @@ class StreamRunner:
         With ``adc_bits`` set, the scorer sees the low-precision ADC
         capture of each frame (:func:`adc_view`) — the paper's always-on
         path — while the caller keeps the raw high-precision frames for
-        whatever the gate lets through. With ``precision="int8"`` the
+        whatever the gate lets through. With an integer precision the
         capture stays *integer codes* end to end (:func:`adc_view_codes`
         into the fused int kernel; raw integer input is treated as
-        already-converted codes). ``labels`` (``(n,)`` ints) feeds
+        already-converted codes — ``"int4"`` additionally nibble-packs
+        at the kernel boundary). ``labels`` (``(n,)`` ints) feeds
         ``adapt.mode == "label"`` updates.
         """
         frames = jnp.asarray(frames)
@@ -705,10 +723,13 @@ class StreamRunner:
             if labels.shape != frames.shape[:1]:
                 raise ValueError(f"labels shape {labels.shape} != "
                                  f"(n,) = {frames.shape[:1]}")
-        if self.precision == "int8":
+        if self.precision in adc_sim.INT_PRECISIONS:
             from repro.kernels import ops as kops
             kops.assert_int_datapath_fits(self.adc_bits, *frames.shape[-2:],
-                                          self.model.h, self.model.w)
+                                          self.model.h, self.model.w,
+                                          stride=self.model.stride,
+                                          block_d=self.block_d,
+                                          packed=self.precision == "int4")
             frames = adc_view_codes(frames, self.adc_bits,
                                     sigma=self.adc_sigma,
                                     key=self._adc_key,
@@ -719,7 +740,8 @@ class StreamRunner:
         n = frames.shape[0]
         self._n_seen += n
         m = self.model
-        if self.backend == "pallas" or self.precision == "int8":
+        if (self.backend == "pallas"
+                or self.precision in adc_sim.INT_PRECISIONS):
             tiles = (self._ensure_geom(frames.shape[-1])
                      if self.adapt is not None
                      else self._ensure_tiles(frames.shape[-1]))

@@ -1,10 +1,39 @@
-"""Shared pytest plumbing: the golden-fixture update flag.
+"""Shared pytest plumbing: golden-fixture update flag + JAX map-count relief.
 
 ``pytest tests/test_golden.py --update-golden`` regenerates the checked-in
 reference outputs under ``tests/golden/`` instead of comparing against
 them. Regenerating is a *reviewed* action — the diff of the golden files
 IS the behavior change.
+
+The module-teardown hook below keeps a long single-process run of the
+whole suite under Linux's ``vm.max_map_count`` ceiling (default 65530).
+Every live XLA:CPU executable holds a triplet of anonymous mmap'd
+JIT-code regions, and jitted entry points referenced from module state
+(runners, memoized helpers, ``functools.partial`` closures) keep their
+executables alive for the life of the process. With enough test modules
+the map count walks into the ceiling and the *next* LLVM compile dies
+with a SIGSEGV when ``mmap`` fails — the failure surfaces in whichever
+test happens to compile last, not in the one that created the pressure.
+``jax.clear_caches()`` drops the executables (and their maps) at module
+boundaries, but only once the process is actually map-heavy, so cheap
+modules don't pay recompilation for shared jitted paths.
 """
+
+import pytest
+
+# Clear compiled-executable caches once the process holds this many
+# memory maps. Well under the 65530 default ceiling, with headroom for
+# the heaviest single module (~15k maps) on top before the next check.
+_MAP_COUNT_HIGH_WATER = 25_000
+
+
+def _map_count():
+    """Current number of memory maps, or None where /proc is unavailable."""
+    try:
+        with open("/proc/self/maps", "rb") as fh:
+            return sum(1 for _ in fh)
+    except OSError:
+        return None
 
 
 def pytest_addoption(parser):
@@ -12,3 +41,15 @@ def pytest_addoption(parser):
         "--update-golden", action="store_true", default=False,
         help="rewrite tests/golden/*.json from the current implementation "
              "instead of asserting against it")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _relieve_jax_map_pressure():
+    yield
+    n = _map_count()
+    # No /proc (non-Linux): clear unconditionally — slower, never fatal.
+    if n is not None and n < _MAP_COUNT_HIGH_WATER:
+        return
+    import jax
+
+    jax.clear_caches()

@@ -1,7 +1,8 @@
-"""Property tests for the ADC quantize/pack layer (ISSUE 4 satellite).
+"""Property tests for the ADC quantize/pack layer.
 
-The int8 datapath's correctness rests on four invariants of the
-conversion layer, exercised here as hypothesis properties:
+The integer datapaths' correctness rests on four invariants of the
+conversion layer, exercised here as hypothesis properties plus
+exhaustive depth sweeps:
 
 * **round-trip**  — ``pack -> unpack`` is the identity, and
   re-converting a reconstruction reproduces the same codes;
@@ -24,6 +25,7 @@ except ImportError:  # fallback keeps these tests running without the dep
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.kernels import sliding_scores_int as k_int
 from repro.sensing import adc
@@ -89,6 +91,71 @@ def test_quantize_per_frame_mixed_depths():
     np.testing.assert_array_equal(got[1], np.asarray(adc.quantize(x[1], 4)))
     np.testing.assert_array_equal(got[2],
                                   np.asarray(adc.quantize(x[2], 12)))
+
+
+@pytest.mark.parametrize("bits", range(1, 17))
+def test_per_frame_converter_bit_exact_exhaustive(bits):
+    """quantize_codes_per_frame == quantize_codes at EVERY depth 1..16,
+    on the inputs where the two implementations could plausibly split:
+    the exact code grid, every half-LSB rounding boundary, zero,
+    full-scale, and the clip edges just outside [0, V_MAX].
+
+    The per-frame converter computes ``levels`` as a traced float32
+    ``left_shift`` where the static converter uses a Python int — this
+    pins that the two arithmetic routes round identically (both levels
+    values are <= 65535 < 2**24, hence exact in float32; a future depth
+    above 24 bits would NOT be, which is why the sweep is exhaustive
+    rather than sampled)."""
+    levels = (1 << bits) - 1
+    k = np.arange(levels + 1, dtype=np.float64)
+    grid = (k / levels * adc.V_MAX).astype(np.float32)          # exact codes
+    half = ((k[:-1] + 0.5) / levels * adc.V_MAX).astype(np.float32)
+    edges = np.array([0.0, adc.V_MAX, -1e-6, adc.V_MAX + 1e-6,
+                      -1.0, 2.0 * adc.V_MAX], np.float32)
+    rng = np.random.default_rng(bits)
+    dense = rng.uniform(-0.2, 1.7, 4096).astype(np.float32)
+    x = jnp.asarray(np.concatenate([grid, half, edges, dense]))[None]
+    a = np.asarray(adc.quantize_codes(x, bits))
+    b = np.asarray(adc.quantize_codes_per_frame(x, jnp.asarray([bits])))
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() == levels
+    # the reconstruction twin agrees with the static reconstruction too
+    np.testing.assert_array_equal(
+        np.asarray(adc.quantize_per_frame(x, jnp.asarray([bits]))),
+        np.asarray(adc.quantize(x, bits)))
+
+
+def test_per_frame_converter_empty_batch():
+    """A zero-frame batch converts to a zero-frame code array (the empty
+    early-return contract check_codes_range also honours)."""
+    x = jnp.zeros((0, 4, 4))
+    out = adc.quantize_codes_per_frame(x, jnp.zeros((0,), jnp.int32))
+    assert out.shape == (0, 4, 4)
+    adc.check_codes_range(out, 8)  # must not raise on empty
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_nibble_pack_round_trip(bits):
+    """pack_nibbles -> unpack_nibbles is the identity on every code the
+    int4 wire format admits, and the kernel-side unpacker agrees with
+    the host-side one bit for bit."""
+    x = jax.random.uniform(jax.random.PRNGKey(bits), (3, 6, 10),
+                           minval=-0.2, maxval=1.7)
+    codes = adc.pack_codes(adc.quantize_codes(x, bits), bits)
+    packed = adc.pack_nibbles(codes)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (3, 6, 5)
+    np.testing.assert_array_equal(np.asarray(adc.unpack_nibbles(packed)),
+                                  np.asarray(codes, np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(k_int._unpack_nibbles_i32(jnp.asarray(packed))),
+        np.asarray(codes, np.int32))
+
+
+def test_nibble_pack_rejects_odd_width():
+    codes = jnp.zeros((4, 7), jnp.uint8)
+    with pytest.raises(ValueError, match="even"):
+        adc.pack_nibbles(codes)
 
 
 @hypothesis.given(st.integers(0, 2**16), st.integers(1, 12))

@@ -100,6 +100,26 @@ def scenario_stream_int8():
     return _stream_payload(*r.process(frames), labels, model.t_score)
 
 
+def scenario_stream_int4():
+    """The packed int4 wire format (two codes per byte) on the same
+    stream — pins the nibble pack/unpack round trip end to end."""
+    frames, labels = make_stream_inputs()
+    model = make_model()
+    r = StreamRunner(model, ControllerConfig(hold_frames=2),
+                     chunk_size=5, adc_bits=4, precision="int4")
+    return _stream_payload(*r.process(frames), labels, model.t_score)
+
+
+def scenario_stream_binary():
+    """The bipolar binary gate (sign-quantized slabs AND class HVs) on
+    the same stream — pins the +-1 datapath's scores and decisions."""
+    frames, labels = make_stream_inputs()
+    model = make_model()
+    r = StreamRunner(model, ControllerConfig(hold_frames=2),
+                     chunk_size=5, adc_bits=8, precision="binary")
+    return _stream_payload(*r.process(frames), labels, model.t_score)
+
+
 def scenario_stream_adaptive():
     """Label-feedback online learning (the mutable-model hot path)."""
     frames, labels = make_stream_inputs(seed=11)
@@ -144,6 +164,8 @@ def scenario_fleet():
 SCENARIOS = {
     "stream_frozen": scenario_stream_frozen,
     "stream_int8": scenario_stream_int8,
+    "stream_int4": scenario_stream_int4,
+    "stream_binary": scenario_stream_binary,
     "stream_adaptive": scenario_stream_adaptive,
     "fleet": scenario_fleet,
 }

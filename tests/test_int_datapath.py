@@ -1,12 +1,14 @@
-"""Int8 ADC-code datapath: kernel correctness, bounds, determinism.
+"""Integer ADC-code datapath: kernel correctness, bounds, determinism.
 
 The int kernel (``repro.kernels.sliding_scores_int``) must (a) agree
 bitwise-closely with its pure-jnp quantized-operand oracle across shapes,
-strides, D tilings and per-stream class tiles, (b) track the float path
-within quantization tolerance, (c) never overflow its int32 accumulators
-at the advertised bounds, and (d) be bitwise deterministic across runs.
-Cross-backend / cross-precision *ranking* contracts live in
-``test_parity_matrix.py``.
+strides, D tilings and per-stream class tiles — in every mode: int8,
+packed int4 wire codes, and the ±1 binary geometry, (b) track the float
+path within quantization tolerance, (c) never overflow its int32
+accumulators at the advertised bounds, and (d) be bitwise deterministic
+across runs. The large-W VMEM working-set regression lives in
+``test_workingset.py``; cross-backend / cross-precision *ranking*
+contracts live in ``test_parity_matrix.py``.
 """
 
 import jax
@@ -189,8 +191,12 @@ def test_int_kernel_worst_case_no_overflow():
     got = k_int.fragment_scores_batch_int(codes, tiles, h=h, w=w,
                                           stride=stride, interpret=True)
     assert np.isfinite(np.asarray(got)).all()
-    # int64 ground-truth accumulation of the projection for one fragment
-    slab = np.asarray(tiles.geom.slab_mat, np.int64).reshape(h, W, D)
+    # int64 ground-truth accumulation of the projection for one fragment:
+    # expand the window's shifted views from the padded base slabs (the
+    # kernel rolls these out in-place; slabs_q[dt, r, i + j] is the value
+    # the old pre-expanded layout stored at slab_mat[dt, r*W + i, j])
+    base = np.asarray(tiles.geom.slabs_q, np.int64)[0]      # (h, D+W-1)
+    slab = np.stack([base[:, i:i + D] for i in range(W)], axis=1)
     cmax = (1 << bits) - 1
     acc64 = slab[:, 0:w, :].sum(axis=(0, 1)) * cmax
     assert np.abs(acc64).max() <= ops.int_datapath_bounds(
@@ -202,16 +208,76 @@ def test_int_kernel_worst_case_no_overflow():
                                rtol=1e-6, atol=1e-6)
 
 
-def test_int_scores_bitwise_deterministic():
+@pytest.mark.parametrize("variant", ["int8", "int4-packed", "binary"])
+def test_int_scores_bitwise_deterministic(variant):
+    """Every accumulation order the int kernel ships — int8, the packed
+    int4 unpack-then-accumulate, and the ±1 binary matmuls — is exact
+    integer arithmetic in a fixed association, hence bitwise stable."""
     N, H, W, D, h, w, stride = 4, 16, 16, 64, 4, 4, 2
-    _, codes, B0, b, C = make_inputs(80, N, H, W, D, h)
+    bits = 4 if variant == "int4-packed" else 8
+    _, codes, B0, b, C = make_inputs(80, N, H, W, D, h, bits=bits)
+    mode = "binary" if variant == "binary" else "int8"
+    tiles = k_int.precompute_tiles_int(B0, b, C, W=W, w=w, stride=stride,
+                                       block_d=32, mode=mode)
+    packed = variant == "int4-packed"
+    if packed:
+        codes = adc.pack_nibbles(codes)
+    a = k_int.fragment_scores_batch_int(codes, tiles, h=h, w=w,
+                                        stride=stride, interpret=True,
+                                        packed=packed)
+    b2 = k_int.fragment_scores_batch_int(codes, tiles, h=h, w=w,
+                                         stride=stride, interpret=True,
+                                         packed=packed)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b2))
+
+
+def test_int4_packed_matches_unpacked_bitwise():
+    """Nibble packing is pure wire format: the kernel's in-place unpack
+    reproduces the unpacked-codes scores bit for bit, and both match the
+    jnp oracle fed the same packed bytes."""
+    N, H, W, D, h, w, stride = 4, 16, 18, 64, 4, 5, 2
+    _, codes, B0, b, C = make_inputs(110, N, H, W, D, h, bits=4)
     tiles = k_int.precompute_tiles_int(B0, b, C, W=W, w=w, stride=stride,
                                        block_d=32)
-    a = k_int.fragment_scores_batch_int(codes, tiles, h=h, w=w,
-                                        stride=stride, interpret=True)
-    b2 = k_int.fragment_scores_batch_int(codes, tiles, h=h, w=w,
-                                         stride=stride, interpret=True)
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b2))
+    packed = adc.pack_nibbles(codes)
+    got_u = k_int.fragment_scores_batch_int(codes, tiles, h=h, w=w,
+                                            stride=stride, interpret=True)
+    got_p = k_int.fragment_scores_batch_int(packed, tiles, h=h, w=w,
+                                            stride=stride, interpret=True,
+                                            packed=True)
+    np.testing.assert_array_equal(np.asarray(got_u), np.asarray(got_p))
+    ref_p = k_int.fragment_scores_batch_int_ref(packed, tiles, h=h, w=w,
+                                                stride=stride, packed=True)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(ref_p),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_binary_mode_kernel_matches_oracle():
+    """mode="binary": slabs and class tiles really are ±1, the kernel
+    still matches the quantized-operand oracle, and scores are finite."""
+    N, H, W, D, h, w, stride = 4, 18, 22, 64, 4, 5, 2
+    _, codes, B0, b, C = make_inputs(120, N, H, W, D, h)
+    tiles = k_int.precompute_tiles_int(B0, b, C, W=W, w=w, stride=stride,
+                                       block_d=32, mode="binary")
+    assert set(np.unique(np.asarray(tiles.geom.slabs_q))) <= {-1, 1}
+    assert set(np.unique(np.asarray(tiles.cpos_t))) <= {-1, 1}
+    assert float(tiles.cpos_norm) == pytest.approx(np.sqrt(D))
+    got = k_int.fragment_scores_batch_int(codes, tiles, h=h, w=w,
+                                          stride=stride, interpret=True)
+    want = k_int.fragment_scores_batch_int_ref(codes, tiles, h=h, w=w,
+                                               stride=stride)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pack_nibbles_needs_even_width_and_geometry_mode_guard():
+    with pytest.raises(ValueError):
+        adc.pack_nibbles(jnp.zeros((2, 4, 15), jnp.int32))
+    B0, b_ = encoding.make_perm_base_rows(key(130), 3, 32)
+    with pytest.raises(ValueError):
+        k_int.precompute_geometry_int(B0, b_, W=14, w=3, stride=2,
+                                      block_d=32, mode="ternary")
 
 
 def test_int_kernel_rejects_float_frames():

@@ -1,16 +1,22 @@
-"""The backend x precision x adapt parity matrix (ISSUE 4 satellite).
+"""The backend x precision x adapt parity matrix.
 
 ONE parametrized surface replaces the ad-hoc per-file backend-parity
 tests that used to live in ``test_kernels_batch.py`` / ``test_fleet.py``:
 
 * **backend parity** — for every (precision, adapt) cell, the ``pallas``
   kernel path and the ``jnp`` path produce the same stream outputs
-  (scores allclose, gate decisions identical);
-* **precision ranking parity** — for every (backend, adapt) cell, the
-  int8 datapath's frame scores *rank* identically to the float path's
-  wherever the float scores are separated by more than the quantization
-  margin (and the absolute perturbation stays under half that margin —
-  which makes the ranking assertion a real constraint, not a tautology);
+  (scores allclose, gate decisions identical) — across all four
+  datapaths (float32 / int8 / packed int4 / binary);
+* **precision ranking parity** — for every (backend, adapt, int
+  precision) cell, the integer datapath's frame scores *rank*
+  identically to the float path's at the matching ADC depth wherever
+  the float scores are separated by more than the quantization margin
+  (and the absolute perturbation stays under half that margin — which
+  makes the ranking assertion a real constraint, not a tautology).
+  ``binary`` is deliberately absent here: sign-quantizing both slabs
+  and class HVs perturbs scores by ~2x the span at this D (measured),
+  so binary holds only the weaker backend/fleet/decision parities and
+  its accuracy story lives in the benchmark's D-vs-AUC curve;
 * **fleet parity** — for every (backend, precision) cell, ``FleetRunner``
   equals S independent ``StreamRunner``s stream-for-stream.
 
@@ -34,16 +40,23 @@ from repro.sensing.stream import StreamRunner
 jax.config.update("jax_platform_name", "cpu")
 
 BACKENDS = ["jnp", "pallas"]
-PRECISIONS = ["float32", "int8"]
+PRECISIONS = ["float32", "int8", "int4", "binary"]
+#: integer precisions that hold the strict ranking-parity contract
+#: against the float path at the matching ADC depth (binary does not —
+#: see the module docstring)
+RANKED_PRECISIONS = ["int8", "int4"]
 ADAPTS = [None, "label"]
 
 FRAME, FRAG, STRIDE, DIM = 24, 6, 3, 128
 N_STREAM, S_FLEET, N_FLEET = 21, 2, 10
 BITS = 8
-#: float-score separation below which int8 ranking flips are tolerated,
-#: as a fraction of the scenario's score span; the matrix also asserts
-#: the int8 perturbation is < margin / 2, so order on separated pairs is
-#: a guaranteed-yet-nontrivial invariant
+#: ADC depth each precision runs at (int4 packs two codes per byte, so
+#: it is capped at 4 bits; binary sign-quantizes 8-bit-code projections)
+PREC_BITS = {"float32": BITS, "int8": BITS, "int4": 4, "binary": BITS}
+#: float-score separation below which integer ranking flips are
+#: tolerated, as a fraction of the scenario's score span; the matrix
+#: also asserts the integer perturbation is < margin / 2, so order on
+#: separated pairs is a guaranteed-yet-nontrivial invariant
 MARGIN_FRAC = 0.25
 
 _CACHE = {}
@@ -77,15 +90,16 @@ def _scenario():
     return _CACHE
 
 
-def _run_stream(backend, precision, adapt):
+def _run_stream(backend, precision, adapt, bits=None):
     sc = _scenario()
-    k = ("stream", backend, precision, adapt)
+    bits = PREC_BITS[precision] if bits is None else bits
+    k = ("stream", backend, precision, adapt, bits)
     if k not in sc["runs"]:
         a = (AdaptConfig(mode="label", lr=0.5) if adapt == "label"
              else None)
         r = StreamRunner(sc["model"], ControllerConfig(hold_frames=2),
                          chunk_size=8, backend=backend, block_d=64,
-                         adc_bits=BITS, precision=precision, adapt=a)
+                         adc_bits=bits, precision=precision, adapt=a)
         feed = sc["labels"] if adapt == "label" else None
         sc["runs"][k] = r.process(sc["frames"], labels=feed)
     return sc["runs"][k]
@@ -97,7 +111,7 @@ def _run_fleet(backend, precision):
     if k not in sc["runs"]:
         r = FleetRunner(sc["model"], ControllerConfig(hold_frames=2),
                         chunk_size=4, backend=backend, block_d=64,
-                        adc_bits=BITS, precision=precision)
+                        adc_bits=PREC_BITS[precision], precision=precision)
         sc["runs"][k] = r.process(sc["fleet"])
     return sc["runs"][k]
 
@@ -110,7 +124,8 @@ def _run_fleet_singles(backend, precision):
         for s in range(S_FLEET):
             r = StreamRunner(sc["model"], ControllerConfig(hold_frames=2),
                              chunk_size=4, backend=backend, block_d=64,
-                             adc_bits=BITS, precision=precision)
+                             adc_bits=PREC_BITS[precision],
+                             precision=precision)
             outs.append(r.process(sc["fleet"][s]))
         sc["runs"][k] = outs
     return sc["runs"][k]
@@ -131,7 +146,8 @@ def test_backend_parity(precision, adapt):
 
 
 # ---------------------------------------------------------------------------
-# precision parity: int8 ranks like float32 in every (backend, adapt) cell
+# precision parity: int8/int4 rank like float32 in every (backend, adapt)
+# cell, at the matching ADC depth
 # ---------------------------------------------------------------------------
 
 def test_scenario_gate_is_nondegenerate():
@@ -141,11 +157,16 @@ def test_scenario_gate_is_nondegenerate():
     assert fired.any() and not fired.all()
 
 
+@pytest.mark.parametrize("iprec", RANKED_PRECISIONS)
 @pytest.mark.parametrize("adapt", ADAPTS)
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_precision_ranking_parity(backend, adapt):
-    s_f, _, _ = _run_stream(backend, "float32", adapt)
-    s_i, _, _ = _run_stream(backend, "int8", adapt)
+def test_precision_ranking_parity(backend, adapt, iprec):
+    """The float comparator runs at the SAME ADC depth as the integer
+    path (float32@4bits for int4) — so the margin bounds quantization
+    *of the datapath*, not of the converter."""
+    bits = PREC_BITS[iprec]
+    s_f, _, _ = _run_stream(backend, "float32", adapt, bits=bits)
+    s_i, _, _ = _run_stream(backend, iprec, adapt)
     margin = MARGIN_FRAC * float(s_f.max() - s_f.min())
     # absolute perturbation stays under half the separation margin...
     assert np.abs(s_i - s_f).max() < margin / 2
@@ -158,12 +179,35 @@ def test_precision_ranking_parity(backend, adapt):
     assert (np.sign(di[sep]) == np.sign(df[sep])).all()
 
 
-def test_precision_scores_not_identical():
-    """int8 really is a different datapath (guards against the precision
-    flag silently routing to the float kernel)."""
+@pytest.mark.parametrize("iprec", ["int8", "int4", "binary"])
+def test_precision_scores_not_identical(iprec):
+    """Each integer precision really is a different datapath (guards
+    against the precision flag silently routing to the float kernel, or
+    int4/binary silently routing to int8)."""
     s_f, _, _ = _run_stream("pallas", "float32", None)
-    s_i, _, _ = _run_stream("pallas", "int8", None)
+    s_i, _, _ = _run_stream("pallas", iprec, None)
     assert np.abs(s_i - s_f).max() > 0.0
+    if iprec != "int8":
+        s_8, _, _ = _run_stream("pallas", "int8", None)
+        assert np.abs(s_i - s_8).max() > 0.0
+
+
+def test_stream_runner_deterministic_per_precision():
+    """Two fresh runners over the same frames produce bitwise-identical
+    scores for every precision — the deterministic-accumulation-order
+    contract at the runner level (the kernel-level twin lives in
+    test_int_datapath.py)."""
+    sc = _scenario()
+    for precision in PRECISIONS:
+        runs = []
+        for _ in range(2):
+            r = StreamRunner(sc["model"], ControllerConfig(hold_frames=2),
+                             chunk_size=8, backend="pallas", block_d=64,
+                             adc_bits=PREC_BITS[precision],
+                             precision=precision)
+            runs.append(r.process(sc["frames"]))
+        np.testing.assert_array_equal(runs[0][0], runs[1][0])
+        np.testing.assert_array_equal(runs[0][2], runs[1][2])
 
 
 # ---------------------------------------------------------------------------
