@@ -1,6 +1,6 @@
 .PHONY: test test-shard1 test-shard2 test-cov test-multidevice deps \
 	bench-stream bench-fleet bench-adapt bench-int bench-int4 \
-	bench-control bench
+	bench-control bench bench-mesh
 
 deps:
 	pip install -r requirements-dev.txt
@@ -36,11 +36,16 @@ test-cov:
 	$(MAKE) test-shard1 PYTEST_EXTRA="--cov=src/repro/kernels \
 	--cov=src/repro/sensing --cov-report=term --cov-fail-under=70"
 
-# shard_map / sensor-axis sharding against a real 8-device host mesh.
+# shard_map / 2-D (sensors x hyperdim) sharding against a real 8-device
+# host mesh. MESH=4x2 (etc.) filters test_parity_matrix's mesh matrix to
+# one shape via FLEET_TEST_MESH so CI can fan the shapes out across jobs;
+# unset, every shape runs in-process.
 test-multidevice:
-	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(if $(MESH),FLEET_TEST_MESH=$(MESH)) PYTHONPATH=src \
 	python -m pytest -x -q tests/test_fleet.py tests/test_sharding.py \
-	tests/test_stream.py tests/test_parity_matrix.py
+	tests/test_stream.py tests/test_parity_matrix.py tests/test_online.py \
+	tests/test_golden.py
 
 bench-stream:
 	PYTHONPATH=src python benchmarks/stream_throughput.py
@@ -62,6 +67,12 @@ bench-int4:
 
 bench-control:
 	PYTHONPATH=src python benchmarks/control_loop.py
+
+# the 2-D mesh scale-out gate: S=1024 on the sensor axis, D=16384 on the
+# hyperdim axis (forced-8-device host mesh), bitwise parity + VMEM
+# certification enforced
+bench-mesh:
+	PYTHONPATH=src python benchmarks/fleet_throughput.py --mesh --check
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

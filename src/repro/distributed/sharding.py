@@ -11,6 +11,15 @@ Usage::
 
 Outside a mesh context every helper is a no-op, so single-device smoke
 tests run the exact same model code.
+
+The sensor fleet (``repro.sensing.fleet``) rides the same table as a 2-D
+logical mesh: ``"sensors"`` partitions the stream axis over the data
+mesh axes (``mesh_extent`` reports the raw extent so the fleet can PAD a
+non-divisible S with masked slots) and ``"hyperdim"`` partitions the
+kernels' hypervector-tile axis over the model axes (``spec_for`` drops
+it when the tile count doesn't divide — graceful replication, never a
+wrong answer). See the per-rule comments below and
+``tests/test_parity_matrix.py`` for the bitwise-parity contract.
 """
 
 from __future__ import annotations
@@ -53,6 +62,14 @@ DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
     # Sensor-fleet axis (repro.sensing.fleet): independent streams, so it
     # shards like a batch — data-parallel over pods/hosts, never "model".
     "sensors": ("pod", "data"),
+    # Hypervector-dimension axis (repro.kernels.sliding_scores*): the HDC
+    # dot products and norms are sums over D, so the D-tile axis (n_dt)
+    # partitions like a TP feature dim over "model". Each device holds a
+    # contiguous shard of class tiles + slabs; the cosine epilogue's fold
+    # runs after a tiled all_gather that restores global tile order, so
+    # sharded scores are bitwise-identical to unsharded (see
+    # kernels/sliding_scores.py::_ordered_tile_fold).
+    "hyperdim": ("model",),
     "act_seq": None,
     # Megatron-style sequence parallelism for the residual stream: layer
     # boundaries (= the per-layer remat checkpoints under scan) are sharded
@@ -95,10 +112,49 @@ def current_rules() -> dict:
     return state[1] if state else dict(DEFAULT_RULES)
 
 
+def mesh_extent(logical: str, mesh: Mesh | None = None,
+                rules: dict | None = None) -> tuple[tuple[str, ...], int]:
+    """Mesh axes a logical name maps to, ignoring divisibility.
+
+    Returns ``(axes, k)`` where ``axes`` is the tuple of mesh axes the
+    rules table maps ``logical`` to that actually exist in ``mesh`` and
+    ``k`` is their total extent (product of sizes; 1 when unmapped or no
+    mesh). Unlike :func:`spec_for`, this does NOT drop axes whose size
+    fails to divide a dim — callers use it to *pad* a dim up to a
+    multiple of ``k`` so the axis always shards (repro.sensing.fleet
+    pads the sensor axis S with masked slots instead of falling back to
+    an unsharded step).
+    """
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return (), 1
+    mapped = rules.get(logical)
+    if mapped is None:
+        return (), 1
+    if isinstance(mapped, str):
+        mapped = (mapped,)
+    out = []
+    k = 1
+    for ax in mapped:
+        if ax not in mesh.shape:
+            continue
+        out.append(ax)
+        k *= mesh.shape[ax]
+    return tuple(out), k
+
+
 def _axis_for(logical: str | None, rules: dict, mesh: Mesh,
               dim_size: int, taken: set) -> tuple[str, ...] | None:
     """Resolve one logical dim -> mesh axes, dropping non-divisible or
-    already-used mesh axes (keeps heterogeneous configs lowering)."""
+    already-used mesh axes (keeps heterogeneous configs lowering).
+
+    This divisibility drop is the *fallback order* for sharded dims: a
+    dim that can't take its mapped axes (size not a multiple) silently
+    stays replicated rather than erroring. Callers that would rather pad
+    than replicate (the fleet's sensors axis) use :func:`mesh_extent` to
+    learn the full extent before resolution.
+    """
     if logical is None:
         return None
     mapped = rules.get(logical)

@@ -87,7 +87,9 @@ def fragment_score_map_batch(frames: Array, class_hvs: Array, B0: Array,
                              b: Array, *, h: int, w: int, stride: int,
                              nonlinearity: NonLin = "rff",
                              tiles: _ss.ScoreTiles | None = None,
-                             block_d: int = 512) -> Array:
+                             block_d: int = 512,
+                             hyperdim_axes: tuple[str, ...] | None = None
+                             ) -> Array:
     """(N, H, W) frames -> (N, my, mx) score maps in ONE kernel launch.
 
     The streaming hot path: every frame in the chunk reuses the same
@@ -100,7 +102,8 @@ def fragment_score_map_batch(frames: Array, class_hvs: Array, B0: Array,
                                      stride=stride, block_d=block_d)
     return _ss.fragment_scores_batch(frames, tiles, h=h, w=w, stride=stride,
                                      nonlinearity=nonlinearity,
-                                     interpret=_interpret())
+                                     interpret=_interpret(),
+                                     hyperdim_axes=hyperdim_axes)
 
 
 def fragment_score_map_batch_int(codes: Array, class_hvs: Array, B0: Array,
@@ -109,7 +112,9 @@ def fragment_score_map_batch_int(codes: Array, class_hvs: Array, B0: Array,
                                  tiles: _ssi.IntScoreTiles | None = None,
                                  block_d: int = 512,
                                  packed: bool = False,
-                                 mode: str = "int8") -> Array:
+                                 mode: str = "int8",
+                                 hyperdim_axes: tuple[str, ...] | None = None
+                                 ) -> Array:
     """(N, H, W) integer ADC codes -> (N, my, mx) score maps, ONE launch.
 
     The integer datapath's streaming hot path: raw codes flow into the
@@ -130,7 +135,8 @@ def fragment_score_map_batch_int(codes: Array, class_hvs: Array, B0: Array,
                                           stride=stride,
                                           nonlinearity=nonlinearity,
                                           interpret=_interpret(),
-                                          packed=packed)
+                                          packed=packed,
+                                          hyperdim_axes=hyperdim_axes)
 
 
 def fragment_score_map_fleet_int(codes: Array, class_hvs: Array, B0: Array,
@@ -139,7 +145,9 @@ def fragment_score_map_fleet_int(codes: Array, class_hvs: Array, B0: Array,
                                  tiles: _ssi.IntScoreTiles | None = None,
                                  block_d: int = 512,
                                  packed: bool = False,
-                                 mode: str = "int8") -> Array:
+                                 mode: str = "int8",
+                                 hyperdim_axes: tuple[str, ...] | None = None
+                                 ) -> Array:
     """(S, C, H, W) code super-chunk -> (S, C, my, mx), ONE launch.
 
     Int twin of :func:`fragment_score_map_fleet`: per-stream int8 (or ±1)
@@ -151,12 +159,14 @@ def fragment_score_map_fleet_int(codes: Array, class_hvs: Array, B0: Array,
         maps = _ssi.fragment_scores_batch_int(
             codes.reshape(S * C, H, W), tiles, h=h, w=w, stride=stride,
             nonlinearity=nonlinearity, interpret=_interpret(),
-            frames_per_stream=C, packed=packed)
+            frames_per_stream=C, packed=packed,
+            hyperdim_axes=hyperdim_axes)
     else:
         maps = fragment_score_map_batch_int(
             codes.reshape(S * C, H, W), class_hvs, B0, b, h=h, w=w,
             stride=stride, nonlinearity=nonlinearity, tiles=tiles,
-            block_d=block_d, packed=packed, mode=mode)
+            block_d=block_d, packed=packed, mode=mode,
+            hyperdim_axes=hyperdim_axes)
     return maps.reshape(S, C, *maps.shape[1:])
 
 
@@ -164,7 +174,9 @@ def fragment_score_map_fleet(frames: Array, class_hvs: Array, B0: Array,
                              b: Array, *, h: int, w: int, stride: int,
                              nonlinearity: NonLin = "rff",
                              tiles: _ss.ScoreTiles | None = None,
-                             block_d: int = 512) -> Array:
+                             block_d: int = 512,
+                             hyperdim_axes: tuple[str, ...] | None = None
+                             ) -> Array:
     """(S, C, H, W) super-chunk -> (S, C, my, mx) score maps, ONE launch.
 
     The fleet hot path: S concurrent sensor streams contribute C frames
@@ -181,10 +193,10 @@ def fragment_score_map_fleet(frames: Array, class_hvs: Array, B0: Array,
         maps = _ss.fragment_scores_batch(
             frames.reshape(S * C, H, W), tiles, h=h, w=w, stride=stride,
             nonlinearity=nonlinearity, interpret=_interpret(),
-            frames_per_stream=C)
+            frames_per_stream=C, hyperdim_axes=hyperdim_axes)
     else:
         maps = fragment_score_map_batch(
             frames.reshape(S * C, H, W), class_hvs, B0, b, h=h, w=w,
             stride=stride, nonlinearity=nonlinearity, tiles=tiles,
-            block_d=block_d)
+            block_d=block_d, hyperdim_axes=hyperdim_axes)
     return maps.reshape(S, C, *maps.shape[1:])

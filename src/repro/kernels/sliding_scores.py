@@ -285,34 +285,60 @@ def _score_kernel(frame_ref, slab_ref, bias_ref, cpos_ref, cneg_ref,
     norms = norm_ref[0].astype(jnp.float32)                  # (1, mx)
     s_n = acc_ref[...] / jnp.maximum(norms[0][:, None], 1e-8)
     phi = apply_nonlinearity(s_n, bias_ref[0], nonlinearity)
-    dpos = jnp.sum(phi * cpos_ref[0], axis=1)[None, None, :]  # (1, 1, mx)
-    dneg = jnp.sum(phi * cneg_ref[0], axis=1)[None, None, :]
-    qq = jnp.sum(phi * phi, axis=1)[None, None, :]
+    # Per-tile partial sums, one (1, 1, 1, mx) output block per D-tile.
+    # The tiles are reduced OUTSIDE the kernel by _ordered_tile_fold so the
+    # combine order is a fixed left-to-right fold regardless of how the
+    # n_dt axis is sharded across devices — the basis of the bitwise
+    # sharded == unsharded guarantee (see fragment_scores_batch).
+    dpos_ref[...] = jnp.sum(phi * cpos_ref[0], axis=1)[None, None, None, :]
+    dneg_ref[...] = jnp.sum(phi * cneg_ref[0], axis=1)[None, None, None, :]
+    qq_ref[...] = jnp.sum(phi * phi, axis=1)[None, None, None, :]
 
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        dpos_ref[...] = jnp.zeros_like(dpos_ref)
-        dneg_ref[...] = jnp.zeros_like(dneg_ref)
-        qq_ref[...] = jnp.zeros_like(qq_ref)
 
-    dpos_ref[...] += dpos
-    dneg_ref[...] += dneg
-    qq_ref[...] += qq
+def _ordered_tile_fold(parts: Array,
+                       hyperdim_axes: tuple[str, ...] | None = None) -> Array:
+    """Reduce a leading D-tile axis with a FIXED left-to-right fold.
+
+    ``parts`` is ``(n_dt_local, ...)`` per-tile partial sums. When the
+    tile axis is sharded over mesh axes ``hyperdim_axes``, a tiled
+    ``all_gather`` first restores the *global* tile order, so every mesh
+    shape folds the exact same floats in the exact same order and the
+    result is bitwise-identical to the single-device reduction. A plain
+    ``jnp.sum``/``psum`` would let XLA reassociate the adds and break
+    that guarantee — do not "simplify" this into one.
+    """
+    if hyperdim_axes:
+        parts = jax.lax.all_gather(parts, hyperdim_axes, axis=0, tiled=True)
+    out = parts[0]
+    for i in range(1, parts.shape[0]):
+        out = out + parts[i]
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("h", "w", "stride",
                                              "nonlinearity", "interpret",
-                                             "frames_per_stream"))
+                                             "frames_per_stream",
+                                             "hyperdim_axes"))
 def fragment_scores_batch(frames: Array, tiles: ScoreTiles, *, h: int,
                           w: int, stride: int,
                           nonlinearity: NonLin = "rff",
                           interpret: bool = False,
-                          frames_per_stream: int | None = None) -> Array:
+                          frames_per_stream: int | None = None,
+                          hyperdim_axes: tuple[str, ...] | None = None
+                          ) -> Array:
     """(N, H, W) frames -> (N, my, mx) score maps in one kernel launch.
 
     The whole batch shares one :class:`ScoreGeometry` precompute; the
-    Pallas grid is ``(N, my, n_dt)`` with the batch/row axes parallel and
-    the hyperdimension tiles as the sequential reduction.
+    Pallas grid is ``(N, my, n_dt)`` with the batch/row axes parallel.
+    Each D-tile emits its own partial dot products; the tiles are folded
+    outside the kernel in fixed left-to-right order (bitwise-stable).
+
+    Inside a ``shard_map`` whose mesh partitions the tile axis over
+    ``hyperdim_axes``, pass those axis names: ``tiles`` then holds this
+    device's contiguous D-shard (``n_dt_local`` leading dim) and the fold
+    is preceded by one tiled ``all_gather`` over the hyperdim axis — the
+    single collective the D-sharded epilogue needs. Scores stay
+    bitwise-identical to the unsharded launch for every mesh shape.
 
     With shared class tiles (``tiles.cpos_t.ndim == 3``) every frame is
     scored against the same classifier. With *per-stream* class tiles
@@ -366,20 +392,25 @@ def fragment_scores_batch(frames: Array, tiles: ScoreTiles, *, h: int,
             pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),   # norms
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
-            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
-            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, 1, 1, mx), lambda n, i, j: (j, n, i, 0)),
+            pl.BlockSpec((1, 1, 1, mx), lambda n, i, j: (j, n, i, 0)),
+            pl.BlockSpec((1, 1, 1, mx), lambda n, i, j: (j, n, i, 0)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((N, my, mx), jnp.float32)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n_dt, N, my, mx),
+                                        jnp.float32)] * 3,
         scratch_shapes=[
             pltpu.VMEM((W + 1, td), jnp.float32),
             pltpu.VMEM((mx, td), jnp.float32),
         ],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,
     )(frames, tiles.slabs, tiles.bias_t, cpos_t, cneg_t, norms)
+
+    dpos = _ordered_tile_fold(dpos, hyperdim_axes)
+    dneg = _ordered_tile_fold(dneg, hyperdim_axes)
+    qq = _ordered_tile_fold(qq, hyperdim_axes)
 
     qn = jnp.maximum(jnp.sqrt(qq), 1e-9)
     if per_stream:

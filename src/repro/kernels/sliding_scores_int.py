@@ -478,21 +478,14 @@ def _score_kernel_int(codes_ref, slab_ref, mask_ref, bias_ref, cpos_ref,
     norms = norm_ref[0].astype(jnp.float32)               # (1, mx)
     s_n = acc.astype(jnp.float32) / norms[0][:, None]
     phi = apply_nonlinearity(s_n, bias_ref[0], nonlinearity)  # (mx, TD)
-    dpos = jnp.sum(phi * cpos_ref[0].astype(jnp.float32),
-                   axis=1)[None, None, :]                 # (1, 1, mx)
-    dneg = jnp.sum(phi * cneg_ref[0].astype(jnp.float32),
-                   axis=1)[None, None, :]
-    qq = jnp.sum(phi * phi, axis=1)[None, None, :]
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        dpos_ref[...] = jnp.zeros_like(dpos_ref)
-        dneg_ref[...] = jnp.zeros_like(dneg_ref)
-        qq_ref[...] = jnp.zeros_like(qq_ref)
-
-    dpos_ref[...] += dpos
-    dneg_ref[...] += dneg
-    qq_ref[...] += qq
+    # Per-tile partials, folded OUTSIDE the kernel in fixed order (shared
+    # _ordered_tile_fold with the float kernel) — the D-tile axis can then
+    # shard over the "hyperdim" mesh axis with bitwise-identical scores.
+    dpos_ref[...] = jnp.sum(phi * cpos_ref[0].astype(jnp.float32),
+                            axis=1)[None, None, None, :]  # (1, 1, 1, mx)
+    dneg_ref[...] = jnp.sum(phi * cneg_ref[0].astype(jnp.float32),
+                            axis=1)[None, None, None, :]
+    qq_ref[...] = jnp.sum(phi * phi, axis=1)[None, None, None, :]
 
 
 def _cosine_epilogue(dpos, dneg, qq, tiles, per_stream: bool, C: int):
@@ -514,13 +507,16 @@ def _check_codes_integer(codes: Array) -> None:
 
 @functools.partial(jax.jit, static_argnames=("h", "w", "stride",
                                              "nonlinearity", "interpret",
-                                             "frames_per_stream", "packed"))
+                                             "frames_per_stream", "packed",
+                                             "hyperdim_axes"))
 def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
                               w: int, stride: int,
                               nonlinearity: NonLin = "rff",
                               interpret: bool = False,
                               frames_per_stream: int | None = None,
-                              packed: bool = False) -> Array:
+                              packed: bool = False,
+                              hyperdim_axes: tuple[str, ...] | None = None
+                              ) -> Array:
     """(N, H, W) integer ADC codes -> (N, my, mx) score maps, ONE launch.
 
     The fused encode->score entry point of the int datapath: raw codes in,
@@ -532,6 +528,12 @@ def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
     BlockSpec layout mirror the float :func:`~repro.kernels.
     sliding_scores.fragment_scores_batch`, including the per-stream
     class-tile indexing (``frames_per_stream``) used by adapting fleets.
+
+    Inside a ``shard_map`` that partitions the D-tile axis, pass the mesh
+    axis names as ``hyperdim_axes``: each device scores its local slab /
+    class-tile shard and the per-tile partials are all_gathered (tiled,
+    order-preserving) before the fixed-order fold — bitwise-identical to
+    the unsharded launch (see ``sliding_scores._ordered_tile_fold``).
     """
     _check_codes_integer(codes)
     N, H, Wc = codes.shape
@@ -587,17 +589,22 @@ def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
             pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),   # norms
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
-            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
-            pl.BlockSpec((1, 1, mx), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, 1, 1, mx), lambda n, i, j: (j, n, i, 0)),
+            pl.BlockSpec((1, 1, 1, mx), lambda n, i, j: (j, n, i, 0)),
+            pl.BlockSpec((1, 1, 1, mx), lambda n, i, j: (j, n, i, 0)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((N, my, mx), jnp.float32)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n_dt, N, my, mx),
+                                        jnp.float32)] * 3,
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,
     )(codes, geom.slabs_q, geom.win_mask, geom.bias_t, cpos_t, cneg_t,
       norms)
+
+    dpos = _ss._ordered_tile_fold(dpos, hyperdim_axes)
+    dneg = _ss._ordered_tile_fold(dneg, hyperdim_axes)
+    qq = _ss._ordered_tile_fold(qq, hyperdim_axes)
 
     return _cosine_epilogue(dpos, dneg, qq, tiles, per_stream, C)
 
@@ -608,14 +615,18 @@ def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
 
 def _int_scores_shared(codes, geom: IntScoreGeometry, cpos_t, cneg_t, *,
                        h: int, w: int, stride: int,
-                       nonlinearity: NonLin):
+                       nonlinearity: NonLin,
+                       hyperdim_axes: tuple[str, ...] | None = None):
     """Shared-classifier jnp int path -> ``(dpos, dneg, qq) (N, my, mx)``.
 
     Same quantized operands and the same int32 accumulation as the kernel
     (the identical :func:`_int_window_acc` core, vmapped); only the
-    (float) epilogue can differ by rounding. Materializes
-    ``(N, my, mx, D)`` projections — the validation/CPU path, not the
-    deployment one.
+    (float) epilogue can differ by rounding. The classifier dots reduce
+    per D-tile first and then fold the tiles in the kernel's fixed
+    left-to-right order (``_ordered_tile_fold``) — so this path, too, is
+    bitwise-invariant to sharding the tile axis over ``hyperdim_axes``.
+    Materializes ``(N, my, mx, D)`` projections — the validation/CPU
+    path, not the deployment one.
     """
     N, H, W = codes.shape
     my = (H - h) // stride + 1
@@ -638,20 +649,26 @@ def _int_scores_shared(codes, geom: IntScoreGeometry, cpos_t, cneg_t, *,
     phi = apply_nonlinearity(s_n, bias, nonlinearity)
     cpos = cpos_t.transpose(1, 0, 2)[None, None].astype(jnp.float32)
     cneg = cneg_t.transpose(1, 0, 2)[None, None].astype(jnp.float32)
-    dpos = jnp.sum(phi * cpos, axis=(3, 4))
-    dneg = jnp.sum(phi * cneg, axis=(3, 4))
-    qq = jnp.sum(phi * phi, axis=(3, 4))
+    # per-tile partials (reduce TD only), then the shared fixed-order fold
+    fold = lambda x: _ss._ordered_tile_fold(jnp.moveaxis(x, 3, 0),
+                                            hyperdim_axes)
+    dpos = fold(jnp.sum(phi * cpos, axis=4))       # (N, my, mx)
+    dneg = fold(jnp.sum(phi * cneg, axis=4))
+    qq = fold(jnp.sum(phi * phi, axis=4))
     return dpos, dneg, qq
 
 
 @functools.partial(jax.jit, static_argnames=("h", "w", "stride",
                                              "nonlinearity",
-                                             "frames_per_stream", "packed"))
+                                             "frames_per_stream", "packed",
+                                             "hyperdim_axes"))
 def fragment_scores_batch_int_ref(codes: Array, tiles: IntScoreTiles, *,
                                   h: int, w: int, stride: int,
                                   nonlinearity: NonLin = "rff",
                                   frames_per_stream: int | None = None,
-                                  packed: bool = False) -> Array:
+                                  packed: bool = False,
+                                  hyperdim_axes: tuple[str, ...] | None
+                                  = None) -> Array:
     """Pure-jnp twin of :func:`fragment_scores_batch_int`.
 
     Identical quantized operands and int32 accumulation (``packed`` codes
@@ -677,13 +694,14 @@ def fragment_scores_batch_int_ref(codes: Array, tiles: IntScoreTiles, *,
         dpos, dneg, qq = jax.vmap(
             lambda cs, cp, cn: _int_scores_shared(
                 cs, geom, cp, cn, h=h, w=w, stride=stride,
-                nonlinearity=nonlinearity))(
+                nonlinearity=nonlinearity, hyperdim_axes=hyperdim_axes))(
                     codes.reshape(S, C, H, W), tiles.cpos_t, tiles.cneg_t)
         my_mx = dpos.shape[2:]
         dpos, dneg, qq = (x.reshape(N, *my_mx) for x in (dpos, dneg, qq))
     else:
         dpos, dneg, qq = _int_scores_shared(
             codes, geom, tiles.cpos_t, tiles.cneg_t, h=h, w=w,
-            stride=stride, nonlinearity=nonlinearity)
+            stride=stride, nonlinearity=nonlinearity,
+            hyperdim_axes=hyperdim_axes)
     return _cosine_epilogue(dpos, dneg, qq, tiles, per_stream,
                             frames_per_stream or 0)

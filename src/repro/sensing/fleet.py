@@ -17,11 +17,16 @@ along a sensor axis without multiplying kernel launches:
 * the optional low-precision **ADC** sits in front of the gate
   (``adc_bits=4`` reproduces the paper's Fig. 3 loop: the gate scores the
   cheap capture, the caller keeps the raw frames for gated-on delivery);
-* the sensor axis is **sharded across devices** with ``shard_map`` via the
-  logical-axis rules in :mod:`repro.distributed.sharding` ("sensors" maps
-  to the data-parallel mesh axes). Streams are independent, so the sharded
-  step needs no communication; without a mesh (or when S doesn't divide)
-  the exact same code runs unsharded — CPU tests are unchanged.
+* the fleet step is **sharded across a 2-D device mesh** with
+  ``shard_map`` via the logical-axis rules in
+  :mod:`repro.distributed.sharding`: "sensors" partitions S over the
+  data-parallel axes (padded with masked slots when S doesn't divide —
+  never an unsharded fallback) and "hyperdim" partitions the D-tile axis
+  of slabs + class tiles over "model" (one order-preserving all_gather in
+  the score epilogue; shared-scope online updates all_gather their
+  samples and fold replicated). Every mesh shape is bitwise-identical to
+  the unsharded runner; without a mesh the exact same code runs
+  unsharded — CPU tests are unchanged.
 
 :func:`fleet_report` turns the per-stream gate decisions into per-stream
 :class:`~repro.core.sensor_control.StreamStats` plus a fleet-aggregate
@@ -54,35 +59,99 @@ from repro.sensing.stream import (StreamState, adc_view, adc_view_codes,
 Array = jax.Array
 
 
-def _sensor_axes(S: int, mesh) -> tuple[str, ...] | None:
-    """Mesh axes the "sensors" logical dim resolves to (None = unsharded)."""
+def _sensor_axes(mesh) -> tuple[tuple[str, ...] | None, int]:
+    """("sensors" mesh axes or None, their total extent k).
+
+    Padding-aware: resolved via :func:`repro.distributed.sharding.
+    mesh_extent`, which keeps non-divisible axes — the fleet pads S up
+    to a multiple of ``k`` with masked slots instead of ever falling
+    back to an unsharded step.
+    """
     if mesh is None:
+        return None, 1
+    axes, k = shlib.mesh_extent("sensors", mesh)
+    return (axes or None), k
+
+
+def _hyperdim_axes(mesh, tiles, backend: str,
+                   precision: str) -> tuple[str, ...] | None:
+    """Mesh axes the "hyperdim" (D-tile) dim shards over, or None.
+
+    The float ``jnp`` backend has no tiled scorer, so only the
+    ``pallas`` backend and the integer precisions (whose jnp oracle is
+    tiled) can partition D. A tile count the mesh extent doesn't divide
+    falls back to replicated tiles (the :func:`spec_for` divisibility
+    rule) — sensors-only sharding still applies.
+    """
+    if mesh is None or tiles is None:
         return None
-    part = shlib.spec_for((S,), ("sensors",), mesh)
+    if backend != "pallas" and precision not in adc_sim.INT_PRECISIONS:
+        return None
+    geom = getattr(tiles, "geom", tiles)
+    slabs = geom.slabs_q if hasattr(geom, "slabs_q") else geom.slabs
+    part = shlib.spec_for((slabs.shape[0],), ("hyperdim",), mesh)
     if not part or part[0] is None:
         return None
     ax = part[0]
     return ax if isinstance(ax, tuple) else (ax,)
 
 
-def _build_step(mesh, axes, **static):
+def _tiles_specs(tiles, hd: tuple[str, ...] | None):
+    """PartitionSpec pytree for the step's ``tiles`` argument.
+
+    Only the D-tile-leading arrays (slabs, bias/idx, class tiles) shard
+    over the hyperdim axes; window masks, scales and the full-D class
+    norms stay replicated — norms ARE full-D quantities, which is what
+    keeps the sharded cosine epilogue exact. Built by
+    ``dataclasses.replace`` on the live tiles instance so static fields
+    (and hence the pytree structure) match the argument exactly.
+    """
+    if tiles is None:
+        return None
+    hd3 = P(hd, None, None) if hd else P()
+    rep = P()
+
+    def geom_specs(g):
+        if hasattr(g, "slabs_q"):
+            return dataclasses.replace(g, slabs_q=hd3, win_mask=rep,
+                                       bias_t=hd3, idx=hd3, slab_scale=rep)
+        return dataclasses.replace(g, slabs=hd3, bias_t=hd3, idx=hd3)
+
+    if hasattr(tiles, "geom"):
+        cls = (P(None, hd, None, None) if hd else P()) \
+            if tiles.cpos_t.ndim == 4 else hd3
+        return dataclasses.replace(tiles, geom=geom_specs(tiles.geom),
+                                   cpos_t=cls, cneg_t=cls,
+                                   cpos_norm=rep, cneg_norm=rep)
+    return geom_specs(tiles)
+
+
+def _build_step(mesh, axes, hd_axes, tiles_spec, **static):
     """Fleet step callable: the shared module-level jit, or shard_map'd.
 
     Unsharded, this is just :func:`repro.sensing.stream.super_chunk_step`
     with the static config bound — every runner shares its global trace
-    cache. Under a mesh, the raw step body is ``shard_map``'d over the
-    sensor axis and jitted per (mesh, axes); streams are independent, so
-    the sharded body is the unsharded body on a local slice of sensors —
-    ``check_rep=False`` because there is no replicated output to verify,
-    and no collective is ever emitted.
+    cache. Under a mesh, the raw step body is ``shard_map``'d over BOTH
+    logical axes — sensors (streams partition like a batch) and hyperdim
+    (each device holds a contiguous D-shard of slabs + class tiles) —
+    and jitted per (mesh, axes, tiles structure).
 
-    Sharding composes with adaptation only in ``"per-stream"`` scope
-    (each device updates its own streams' classifiers — still no
-    collectives). A *shared* classifier update is a sequential fold
-    across all streams, so ``FleetRunner`` falls back to the unsharded
-    step for it (see :meth:`FleetRunner._ensure_step`).
+    Collectives, all inside the step body and all order-preserving:
+
+    * the scorer's tile fold all_gathers per-tile partials over
+      ``hd_axes`` before a fixed left-to-right reduction
+      (``sliding_scores._ordered_tile_fold``) — bitwise-equal to the
+      single-device epilogue;
+    * a shared-scope online update all_gathers the masked samples over
+      ``axes`` and replays the identical sequential fold on every
+      device (``stream.super_chunk_fn._shared_fold``) — the former
+      "falls back to unsharded" case, now sharded and still bitwise.
+
+    ``check_rep=False`` because replicated outputs (shared classifiers)
+    are produced by identical replicated folds the checker can't see
+    through.
     """
-    if axes is None:
+    if axes is None and hd_axes is None:
         return functools.partial(super_chunk_step, **static)
     from jax.experimental.shard_map import shard_map
     s4, s3, s2, s1 = (P(axes, None, None, None), P(axes, None, None),
@@ -93,8 +162,9 @@ def _build_step(mesh, axes, **static):
     state_in = StreamState(class_hvs=s3 if per_stream else rep,
                            holds=s1, phases=s1, frame_idx=rep)
     return jax.jit(shard_map(
-        functools.partial(super_chunk_fn, **static), mesh=mesh,
-        in_specs=(s4, state_in, rep, rep, rep, rep, rep, s2),
+        functools.partial(super_chunk_fn, sensor_axes=axes,
+                          hyperdim_axes=hd_axes, **static), mesh=mesh,
+        in_specs=(s4, state_in, rep, rep, tiles_spec, rep, rep, s2, s1),
         out_specs=(s2, s2, s2, s2, state_in),
         check_rep=False))
 
@@ -180,8 +250,9 @@ class FleetRunner:
     classifier — updates are ``vmap``'d over streams, scoring stays one
     kernel launch (stream-indexed class-tile BlockSpecs), and the sharded
     step continues to partition cleanly (no collectives). Shared-scope
-    updates are inherently sequential across streams, so that combination
-    falls back to the unsharded step.
+    updates shard too: the step all_gathers every shard's masked samples
+    and replays the identical time-ordered fold on each device, so the
+    shared classifier stays replicated and bitwise-equal to unsharded.
 
     ``control=`` (:class:`~repro.core.sensor_control.CaptureConfig`)
     closes each stream's capture loop independently: per-stream
@@ -354,24 +425,32 @@ class FleetRunner:
         self._hp = [[] for _ in self._hp]
         return out
 
-    def _ensure_step(self, S: int):
+    def _ensure_step(self, tiles):
+        """Step callable + the sensor-axis extent k (S pads to k·⌈S/k⌉).
+
+        Cached per (mesh, resolved axes, adapt config, tiles pytree
+        structure) — a new tiles *instance* (every frozen-cache refresh)
+        reuses the step as long as its structure is unchanged, so
+        sharding never causes per-chunk retraces. Shared-scope
+        adaptation shards like everything else (the step all_gathers the
+        samples and folds replicated); there is no unsharded fallback.
+        """
         mesh = self._mesh if self._mesh is not None else shlib.current_mesh()
-        axes = _sensor_axes(S, mesh)
-        if self.adapt is not None and self.adapt.scope == "shared":
-            # a shared-classifier update folds every stream's samples
-            # sequentially — not partitionable without communication
-            axes = None
-        key = (id(mesh) if axes else None, axes, self.adapt)
+        axes, k = _sensor_axes(mesh)
+        hd_axes = _hyperdim_axes(mesh, tiles, self.backend, self.precision)
+        key = (id(mesh) if (axes or hd_axes) else None, axes, hd_axes,
+               self.adapt, jax.tree_util.tree_structure(tiles))
         if self._step is None or self._step_key != key:
             m = self.model
             self._step = _build_step(
-                mesh, axes, h=m.h, w=m.w, stride=m.stride,
+                mesh, axes, hd_axes, _tiles_specs(tiles, hd_axes),
+                h=m.h, w=m.w, stride=m.stride,
                 nonlinearity=m.nonlinearity, t_detection=self.t_detection,
                 hold_frames=self.config.hold_frames, backend=self.backend,
                 adapt=self.adapt, precision=self.precision,
                 adc_lsb=self._adc_lsb, decim=self._decim)
             self._step_key = key
-        return self._step
+        return self._step, k
 
     def process(self, frames, labels=None
                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -445,7 +524,14 @@ class FleetRunner:
                      else self._ensure_tiles(frames.shape[-1]))
         else:
             tiles = None
-        step = self._ensure_step(S)
+        step, k = self._ensure_step(tiles)
+        # Pad the sensor axis to the mesh extent with masked slots: the
+        # padded step shards for ANY S (never a recompile per S, never an
+        # unsharded fallback); masked slots are exact no-ops on every
+        # real slot (tests/test_fleet.py pins S=5/S=9 on 8 devices
+        # bitwise). Carried state stays at the real S.
+        S_pad = -(-S // k) * k
+        slot_mask = jnp.arange(S_pad) < S
         scores = np.empty((S, n), np.float32)
         fired = np.empty((S, n), bool)
         gated = np.empty((S, n), bool)
@@ -459,9 +545,38 @@ class FleetRunner:
                 pad = self.chunk_size - n_valid
                 chunk = jnp.pad(chunk, ((0, 0), (0, pad), (0, 0), (0, 0)))
                 lab = jnp.pad(lab, ((0, 0), (0, pad)))
+            state = self._state
+            if S_pad != S:
+                pad_s = S_pad - S
+                chunk = jnp.pad(chunk,
+                                ((0, pad_s),) + ((0, 0),) * 3)
+                lab = jnp.pad(lab, ((0, pad_s), (0, 0)))
+                chvs = state.class_hvs
+                if chvs.ndim == 3:
+                    # pad slots carry (discarded) copies of the model's
+                    # classifier — real values, so retiling them can
+                    # never poison a shared kernel launch with NaNs
+                    chvs = jnp.concatenate(
+                        [chvs, jnp.broadcast_to(
+                            self.model.class_hvs,
+                            (pad_s,) + self.model.class_hvs.shape)], 0)
+                state = StreamState(
+                    class_hvs=chvs,
+                    holds=jnp.pad(state.holds, (0, pad_s)),
+                    phases=jnp.pad(state.phases, (0, pad_s)),
+                    frame_idx=state.frame_idx)
             s, f, g, smp, new_state = step(
-                chunk, self._state, m.B0, m.b, tiles,
-                jnp.float32(m.t_score), jnp.int32(n_valid), lab)
+                chunk, state, m.B0, m.b, tiles,
+                jnp.float32(m.t_score), jnp.int32(n_valid), lab, slot_mask)
+            if S_pad != S:
+                s, f, g, smp = s[:S], f[:S], g[:S], smp[:S]
+                new_state = StreamState(
+                    class_hvs=(new_state.class_hvs[:S]
+                               if new_state.class_hvs.ndim == 3
+                               else new_state.class_hvs),
+                    holds=new_state.holds[:S],
+                    phases=new_state.phases[:S],
+                    frame_idx=new_state.frame_idx)
             if self.adapt is None:
                 # keep the ORIGINAL class-hv ref: values are untouched and
                 # the identity-keyed tile cache must not churn

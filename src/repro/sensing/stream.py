@@ -307,11 +307,13 @@ def _top_fragment_hvs(frames: Array, maps: Array, B0: Array, b: Array, *,
 
 
 def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
-                   n_valid, labels, *, h, w, stride, nonlinearity,
-                   t_detection, hold_frames, backend,
+                   n_valid, labels, slot_mask=None, *, h, w, stride,
+                   nonlinearity, t_detection, hold_frames, backend,
                    adapt: AdaptConfig | None = None,
                    precision: str = "float32", adc_lsb: float = 1.0,
-                   decim: int | None = None):
+                   decim: int | None = None,
+                   sensor_axes: tuple[str, ...] | None = None,
+                   hyperdim_axes: tuple[str, ...] | None = None):
     """One streaming step over an ``(S, C, H, W)`` super-chunk.
 
     The shared core of both runners: ``StreamRunner`` calls it with
@@ -360,6 +362,24 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     of the decision, the gate, and the online update), and ``decim == 1``
     reproduces the open-loop outputs bitwise.
 
+    ``slot_mask`` (``(S,)`` bool, default all-true) marks *real* sensor
+    slots: the fleet pads S up to the mesh extent with masked slots so a
+    non-divisible fleet still shards (never a recompile or an unsharded
+    fallback). Masked slots never fire, never sample, and never
+    contribute to a shared-scope update — their presence is an exact
+    no-op on every real slot's outputs and on the shared classifier.
+
+    ``sensor_axes`` / ``hyperdim_axes`` name the mesh axes this step is
+    ``shard_map``'d over (None outside a mesh). ``hyperdim_axes`` flows
+    to the scorer's tile fold (tiled all_gather before a fixed-order
+    reduction — see ``sliding_scores._ordered_tile_fold``);
+    ``sensor_axes`` makes the shared-scope online fold all_gather the
+    per-shard samples so every device folds the full fleet's samples in
+    the identical global time-then-stream order. Both keep outputs
+    bitwise-identical to the unsharded step — a ``psum`` of per-shard
+    deltas could NOT, because each perceptron step depends on the
+    running classifier state.
+
     Returns ``(scores (S, C), fired, gated, sampled, new_state)``;
     ``sampled`` marks the frames the LP ADC actually converted.
     """
@@ -383,15 +403,15 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
         if backend == "pallas":
             maps = kops.fragment_score_map_fleet_int(
                 kframes, class_hvs, B0, b, h=h, w=w, stride=stride,
-                nonlinearity=nonlinearity, tiles=ktiles,
-                packed=packed)                               # (S,C,my,mx)
+                nonlinearity=nonlinearity, tiles=ktiles, packed=packed,
+                hyperdim_axes=hyperdim_axes)                 # (S,C,my,mx)
         else:
             fps = C if ktiles.cpos_t.ndim == 4 else None
             maps = ssi.fragment_scores_batch_int_ref(
                 kframes.reshape(S * C, H, kframes.shape[-1]), ktiles,
                 h=h, w=w, stride=stride, nonlinearity=nonlinearity,
-                frames_per_stream=fps,
-                packed=packed).reshape(S, C, my, mx)
+                frames_per_stream=fps, packed=packed,
+                hyperdim_axes=hyperdim_axes).reshape(S, C, my, mx)
     elif backend == "pallas":
         from repro.kernels import ops as kops
         if adapt is None:
@@ -402,7 +422,8 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
             ktiles = kops.retile_classes(tiles, class_hvs)
         maps = kops.fragment_score_map_fleet(
             frames, class_hvs, B0, b, h=h, w=w, stride=stride,
-            nonlinearity=nonlinearity, tiles=ktiles)         # (S, C, my, mx)
+            nonlinearity=nonlinearity, tiles=ktiles,
+            hyperdim_axes=hyperdim_axes)                     # (S, C, my, mx)
     elif per_stream:
         maps = jax.vmap(lambda fs, cv: jax.vmap(
             lambda f: hypersense.fragment_score_map(
@@ -425,9 +446,13 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
         fired = jnp.zeros((S, C), bool)
     else:
         fired = (scores > t_score) & valid[None, :]
+    if slot_mask is not None:
+        fired = fired & slot_mask[:, None]
 
     if decim is None:
         sampled = jnp.broadcast_to(valid[None, :], (S, C))
+        if slot_mask is not None:
+            sampled = sampled & slot_mask[:, None]
         gated, holds_seq = jax.vmap(
             lambda f, h0: gate_scan(f, hold_frames, h0))(fired, state.holds)
         phase_out = state.phases
@@ -436,6 +461,8 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
             lambda f, h0, p0: control_scan(f, hold_frames, decim, h0, p0))(
                 fired, state.holds, state.phases)
         fired = fired & sampled
+        if slot_mask is not None:
+            sampled = sampled & slot_mask[:, None]
         phase_out = jnp.where(n_valid > 0,
                               phases_seq[:, jnp.maximum(n_valid - 1, 0)],
                               state.phases)
@@ -454,36 +481,58 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
                                stride=stride, mx=mx,
                                nonlinearity=nonlinearity)    # (S, C, D)
         labels = labels.astype(jnp.int32)
+
+        def _shared_fold(chvs, hv, labels, mask2d):
+            # One shared classifier: fold samples in time order (stream
+            # index breaks ties), matching real arrival order. Under
+            # sensor sharding, all_gather the per-shard samples first
+            # (tiled = global stream order restored) and run the SAME
+            # sequential fold replicated on every device — the perceptron
+            # step depends on the running classifier, so this, not a psum
+            # of deltas, is the all-reduce that matches unsharded bitwise.
+            if sensor_axes:
+                hv = jax.lax.all_gather(hv, sensor_axes, axis=0, tiled=True)
+                labels = jax.lax.all_gather(labels, sensor_axes, axis=0,
+                                            tiled=True)
+                mask2d = jax.lax.all_gather(mask2d, sensor_axes, axis=0,
+                                            tiled=True)
+            s_all, dim = hv.shape[0], hv.shape[-1]
+            hv_t = hv.transpose(1, 0, 2).reshape(C * s_all, dim)
+            lab_t = labels.T.reshape(C * s_all)
+            val_t = mask2d.T.reshape(C * s_all)
+            return online.apply_chunk(adapt, chvs, hv_t, lab_t, val_t)[0]
+
+        def _per_stream_fold(chvs, hv, labels, mask2d):
+            # lax.map, NOT vmap: XLA's batched dot inside apply_chunk
+            # reassociates with the batch extent, so a vmap'd fold is not
+            # bitwise stable when sensor sharding changes the per-device
+            # batch. lax.map runs each stream through the identical
+            # unbatched program — any partition of the stream axis gives
+            # the same per-row bits (tests/test_parity_matrix.py pins the
+            # full mesh matrix on this).
+            return jax.lax.map(
+                lambda a: online.apply_chunk(adapt, a[0], a[1],
+                                             a[2], a[3])[0],
+                (chvs, hv, labels, mask2d))
+
         if decim is None:
+            # masked pad slots contribute nothing (exact no-op selects)
+            mask2d = jnp.broadcast_to(valid[None, :], (S, C))
+            if slot_mask is not None:
+                mask2d = mask2d & slot_mask[:, None]
             if per_stream:
-                class_hvs = jax.vmap(
-                    lambda cv, hs, ls: online.apply_chunk(
-                        adapt, cv, hs, ls, valid)[0])(class_hvs, hv, labels)
+                class_hvs = _per_stream_fold(class_hvs, hv, labels, mask2d)
             else:
-                # one shared classifier: fold samples in time order (stream
-                # index breaks ties), matching real arrival order
-                dim = hv.shape[-1]
-                hv_t = hv.transpose(1, 0, 2).reshape(C * S, dim)
-                lab_t = labels.T.reshape(C * S)
-                val_t = jnp.repeat(valid, S)
-                class_hvs = online.apply_chunk(adapt, class_hvs, hv_t,
-                                               lab_t, val_t)[0]
+                class_hvs = _shared_fold(class_hvs, hv, labels, mask2d)
         else:
             # closed loop: a frame the LP ADC skipped was never scored —
-            # it must not feed the online update either
+            # it must not feed the online update either (sampled already
+            # carries the slot mask)
             seen = sampled & valid[None, :]                     # (S, C)
             if per_stream:
-                class_hvs = jax.vmap(
-                    lambda cv, hs, ls, vl: online.apply_chunk(
-                        adapt, cv, hs, ls, vl)[0])(class_hvs, hv, labels,
-                                                   seen)
+                class_hvs = _per_stream_fold(class_hvs, hv, labels, seen)
             else:
-                dim = hv.shape[-1]
-                hv_t = hv.transpose(1, 0, 2).reshape(C * S, dim)
-                lab_t = labels.T.reshape(C * S)
-                val_t = seen.T.reshape(C * S)
-                class_hvs = online.apply_chunk(adapt, class_hvs, hv_t,
-                                               lab_t, val_t)[0]
+                class_hvs = _shared_fold(class_hvs, hv, labels, seen)
 
     new_state = StreamState(class_hvs=class_hvs, holds=hold_out,
                             phases=phase_out,
@@ -497,7 +546,8 @@ super_chunk_step = jax.jit(
     super_chunk_fn, static_argnames=("h", "w", "stride", "nonlinearity",
                                      "t_detection", "hold_frames",
                                      "backend", "adapt", "precision",
-                                     "adc_lsb", "decim"))
+                                     "adc_lsb", "decim", "sensor_axes",
+                                     "hyperdim_axes"))
 
 
 def model_geometry(model: HyperSenseModel, W: int, block_d: int,

@@ -272,23 +272,63 @@ def test_fleet_sensor_axis_actually_partitioned():
     assert spec[0] is not None
 
 
-def test_fleet_non_divisible_sensor_axis_falls_back():
-    """S that doesn't divide the mesh axis degrades to unsharded (the
-    rules engine drops non-divisible axes) instead of erroring."""
+@pytest.mark.parametrize("S", [3, 5, 9])
+def test_fleet_non_divisible_sensor_axis_pads_and_shards(S):
+    """S that doesn't divide the mesh is padded with masked slots — the
+    step still shard_maps (never an unsharded fallback, never an error)
+    and every real stream's outputs are bitwise-identical. On the CI
+    8-device mesh S=5 pads to 8 and S=9 pads to 16."""
+    from repro.sensing import fleet as fleet_mod
+
     model = make_model()
-    frames, _ = make_fleet(S=3, N=5)      # 3 streams never divide 2/4/8...
+    frames, _ = make_fleet(S=S, N=5)
     cfg = ControllerConfig(hold_frames=1)
-    if jax.device_count() % 3 == 0:
-        pytest.skip("device count divisible by 3")
+    if jax.device_count() % S == 0:
+        pytest.skip(f"device count divisible by {S}")
     plain = FleetRunner(model, cfg, chunk_size=4)
     s0, f0, g0 = plain.process(frames)
     mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
     with shlib.use_mesh(mesh):
         r = FleetRunner(model, cfg, chunk_size=4)
+        # the sensors axis must still be claimed (padding, not fallback)
+        axes, k = fleet_mod._sensor_axes(mesh)
+        assert axes == ("data",) and k == jax.device_count()
         s1, f1, g1 = r.process(frames)
+        assert r._step_key[1] == ("data",)   # the built step is sharded
     np.testing.assert_array_equal(s0, s1)
     np.testing.assert_array_equal(f0, f1)
     np.testing.assert_array_equal(g0, g1)
+    # carried state stays at the real S (pad slots never leak out)
+    assert r.holds.shape == (S,)
+
+
+def test_fleet_shared_adapt_sharded_no_fallback():
+    """Shared-scope online adaptation now shards (all_gathered samples +
+    replicated fold) instead of falling back to the unsharded step, and
+    the adapted classifier matches unsharded bitwise."""
+    from repro.core.online import AdaptConfig
+    from repro.sensing import fleet as fleet_mod
+
+    model = make_model()
+    S = 8
+    frames, labels = make_fleet(S=S, N=7)
+    cfg = ControllerConfig(hold_frames=1)
+    ad = AdaptConfig(mode="label", lr=0.5, scope="shared")
+    plain = FleetRunner(model, cfg, chunk_size=4, adapt=ad)
+    s0, f0, g0 = plain.process(frames, labels=labels)
+    mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    with shlib.use_mesh(mesh):
+        r = FleetRunner(model, cfg, chunk_size=4, adapt=ad)
+        s1, f1, g1 = r.process(frames, labels=labels)
+        assert r._step_key[1] == ("data",)   # sharded, no fallback
+    np.testing.assert_array_equal(s0, s1)
+    np.testing.assert_array_equal(f0, f1)
+    np.testing.assert_array_equal(g0, g1)
+    np.testing.assert_array_equal(np.asarray(plain.class_hvs),
+                                  np.asarray(r.class_hvs))
+    # the shared classifier actually moved (the fold is not a no-op)
+    assert not np.allclose(np.asarray(r.class_hvs),
+                           np.asarray(model.class_hvs))
 
 
 # ---------------------------------------------------------------------------

@@ -161,6 +161,54 @@ def scenario_fleet():
     }
 
 
+def scenario_fleet_sharded():
+    """Closed-loop control + shared adaptation + int8, on a 4x2
+    (sensors x hyperdim) mesh with S=3 padding the 4-way sensor axis —
+    the full 2-D shard_map datapath in one frozen fixture. Bitwise parity
+    with the unsharded runner is pinned in test_parity_matrix.py; this
+    pins the VALUES (and, via test_golden_fleet_sharded_replays_bitwise,
+    replay determinism) against silent drift."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro.core.sensor_control import CaptureConfig
+    from repro.distributed import sharding as shlib
+
+    cfg = synthetic.RadarConfig(height=24, width=24)
+    sets = [synthetic.make_dataset(jax.random.PRNGKey(30 + s), 11, cfg)
+            for s in range(3)]
+    frames = jnp.stack([st[0] for st in sets])
+    labels = np.stack([np.asarray(st[2]) for st in sets])
+    model = make_model()
+    with shlib.use_mesh(jax.make_mesh((4, 2), ("data", "model"))):
+        r = FleetRunner(model,
+                        ControllerConfig(base_rate_hz=20.0,
+                                         active_rate_hz=60.0,
+                                         hold_frames=2),
+                        chunk_size=4, backend="jnp", block_d=16,
+                        adc_bits=8, precision="int8",
+                        adapt=AdaptConfig(mode="label", lr=0.5,
+                                          scope="shared"),
+                        control=CaptureConfig())
+        scores, fired, gated = r.process(frames, labels=labels)
+    # the step must really have sharded BOTH axes — a fallback would
+    # freeze fallback numbers into the fixture
+    assert r._step_key[1] == ("data",) and r._step_key[2] == ("model",)
+    _assert_decision_margin(scores, model.t_score)
+    rep = fleet_report(fired, gated, labels, capture=r.capture_log)
+    return {
+        "scores": [round(float(s), 6) for s in scores.ravel()],
+        "fired": fired.ravel().astype(int).tolist(),
+        "gated": gated.ravel().astype(int).tolist(),
+        "sampled": np.asarray(r.capture_log.sampled).ravel()
+                     .astype(int).tolist(),
+        "duty_cycle": round(rep.duty_cycle, 6),
+        "energy_total_j": round(rep.energy_total_j, 6),
+        "class_hvs_checksum": round(
+            float(jnp.sum(jnp.abs(r.class_hvs))), 4),
+    }
+
+
 SCENARIOS = {
     "stream_frozen": scenario_stream_frozen,
     "stream_int8": scenario_stream_int8,
@@ -168,6 +216,7 @@ SCENARIOS = {
     "stream_binary": scenario_stream_binary,
     "stream_adaptive": scenario_stream_adaptive,
     "fleet": scenario_fleet,
+    "fleet_sharded": scenario_fleet_sharded,
 }
 
 
@@ -205,4 +254,14 @@ def test_golden(name, request):
         f"pytest tests/test_golden.py --update-golden and review the diff")
     want = json.loads(path.read_text())
     _assert_matches(got, want, name)
+
+
+def test_golden_fleet_sharded_replays_bitwise():
+    """Two independent builds of the sharded-fleet scenario — fresh
+    runners, fresh compiles — produce the IDENTICAL payload, float for
+    float: the mesh datapath (collectives included) is deterministic, so
+    the golden fixture is replayable, not a lucky snapshot."""
+    a = scenario_fleet_sharded()
+    b = scenario_fleet_sharded()
+    assert a == b
 

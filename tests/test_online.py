@@ -370,6 +370,73 @@ def test_fleet_shared_adapt_folds_time_ordered():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_fleet_shared_adapt_sharded_folds_time_ordered():
+    """Shared-scope fleet UNDER a sensor mesh: the all-gathered fold —
+    not a host fallback — still equals retrain_epoch over the global
+    time-ordered sequence, with a non-divisible S exercising masked pad
+    slots. The sharded run is also bitwise-equal to the unsharded one."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro.distributed import sharding as shlib
+    from repro.sensing import fleet as fleet_mod
+
+    m = make_model()
+    S, N, cs = 3, 8, 4                         # S=3 never divides >=2 devs
+    frames, labels = make_fleet(S=S, N=N)
+
+    def run(mesh):
+        fr = FleetRunner(m, ControllerConfig(hold_frames=2), chunk_size=cs,
+                         adapt=AdaptConfig(mode="label", lr=0.4,
+                                           scope="shared"))
+        if mesh is None:
+            fr.process(frames, labels=labels)
+        else:
+            with shlib.use_mesh(mesh):
+                fr.process(frames, labels=labels)
+        return fr
+
+    mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    fr = run(mesh)
+    # the step really sharded: no shared-scope fallback survives
+    assert fr._step_key[1] == ("data",)
+    np.testing.assert_array_equal(np.asarray(fr.class_hvs),
+                                  np.asarray(run(None).class_hvs))
+
+    chvs = m.class_hvs
+    mx = encoding.num_windows(frames.shape[-1], m.w, m.stride)
+    for a in range(0, N, cs):
+        ch = frames[:, a:a + cs]
+        maps = jnp.stack([jnp.stack([hypersense.fragment_score_map(
+            f, chvs, m.B0, m.b, h=m.h, w=m.w, stride=m.stride)
+            for f in ch[s]]) for s in range(S)])
+        hv = _top_fragment_hvs(ch, maps, m.B0, m.b, h=m.h, w=m.w,
+                               stride=m.stride, mx=mx,
+                               nonlinearity=m.nonlinearity)     # (S, C, D)
+        c = ch.shape[1]
+        hv_t = jnp.transpose(hv, (1, 0, 2)).reshape(c * S, -1)
+        lab_t = jnp.asarray(labels[:, a:a + cs]).T.reshape(c * S)
+        chvs = fm.retrain_epoch(chvs, hv_t, lab_t, 0.4)
+    np.testing.assert_allclose(np.asarray(fr.class_hvs), np.asarray(chvs),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunk_update_interleaved_mask_is_exact_noop():
+    """Pad-slot samples land INTERLEAVED in the time-major fold (every
+    frame contributes one sample per padded stream slot), not just at the
+    tail — masked anywhere, they must leave the fold bitwise on the
+    no-pad trajectory."""
+    hvs = jax.random.normal(key(6), (12, 64))
+    labels = jax.random.randint(key(7), (12,), 0, 2)
+    chvs0 = jax.random.normal(key(8), (2, 64))
+    keep = jnp.asarray([True, True, False, True, True, False,
+                        True, True, False, True, True, False])
+    want, _ = online.chunk_update(chvs0, hvs[keep], labels[keep])
+    got, wrong = online.chunk_update(chvs0, hvs, labels, valid=keep)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert not bool(np.asarray(wrong)[~np.asarray(keep)].any())
+
+
 def test_fleet_frozen_still_bitwise_after_refactor():
     """adapt=None fleet: still bitwise equal per-stream to frozen
     StreamRunners on pallas (the ISSUE 2 contract survives ISSUE 3)."""

@@ -18,12 +18,21 @@ tests that used to live in ``test_kernels_batch.py`` / ``test_fleet.py``:
   so binary holds only the weaker backend/fleet/decision parities and
   its accuracy story lives in the benchmark's D-vs-AUC curve;
 * **fleet parity** — for every (backend, precision) cell, ``FleetRunner``
-  equals S independent ``StreamRunner``s stream-for-stream.
+  equals S independent ``StreamRunner``s stream-for-stream;
+* **mesh parity** — for every (mesh shape, precision, adapt scope) cell,
+  the 2-D (sensors x hyperdim) ``shard_map``'d fleet produces scores,
+  gate decisions, AND adapted classifiers bitwise-identical to the
+  unsharded runner. Shapes whose device product exceeds the host run
+  only under the CI multi-device job (``XLA_FLAGS=--xla_force_host_
+  platform_device_count=8``); ``FLEET_TEST_MESH=4x2`` filters the matrix
+  to one shape so CI can fan the shapes out across jobs.
 
 Every cell shares ONE module-cached scenario (a gate trained on the
 synthetic distribution, so scores are well spread), keeping the matrix
 cheap: each runner executes once and every assertion reads the cache.
 """
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -82,11 +91,13 @@ def _scenario():
                                            t_detection=1)
     s_frames, _, s_labels = synthetic.make_dataset(
         jax.random.PRNGKey(2), N_STREAM, cfg)
-    f_frames = jnp.stack([
-        synthetic.make_dataset(jax.random.PRNGKey(3 + s), N_FLEET, cfg)[0]
-        for s in range(S_FLEET)])
+    f_sets = [synthetic.make_dataset(jax.random.PRNGKey(3 + s), N_FLEET,
+                                     cfg) for s in range(S_FLEET)]
+    f_frames = jnp.stack([fs[0] for fs in f_sets])
+    f_labels = np.stack([np.asarray(fs[2]) for fs in f_sets])
     _CACHE.update(model=model, frames=s_frames,
-                  labels=np.asarray(s_labels), fleet=f_frames, runs={})
+                  labels=np.asarray(s_labels), fleet=f_frames,
+                  fleet_labels=f_labels, runs={})
     return _CACHE
 
 
@@ -233,3 +244,85 @@ def test_fleet_pallas_bitwise_matches_stream_runner():
         singles = _run_fleet_singles("pallas", precision)
         for s, (s_i, _, _) in enumerate(singles):
             np.testing.assert_array_equal(s_f[s], s_i)
+
+
+# ---------------------------------------------------------------------------
+# mesh parity: every (mesh shape, precision, adapt scope) cell of the 2-D
+# (sensors x hyperdim) sharded fleet is BITWISE-identical to unsharded
+# ---------------------------------------------------------------------------
+
+#: (data, model) mesh shapes of the acceptance matrix. The fleet's S=2
+#: pads up to the data extent (masked slots), and the hyperdim rule
+#: claims "model" for the n_dt = DIM / MESH_BLOCK_D = 8 tile axis — so
+#: 4x2/2x4/1x8 really partition D across devices.
+MESH_SHAPES = {"1x1": (1, 1), "8x1": (8, 1), "4x2": (4, 2),
+               "2x4": (2, 4), "1x8": (1, 8)}
+#: block_d for the mesh cells: n_dt = 128/16 = 8 divides every model-axis
+#: extent in MESH_SHAPES, so the hyperdim axis shards in every shape
+MESH_BLOCK_D = 16
+#: backend per precision: pallas pins the kernel path (float + the packed
+#: int kernel); jnp pins the tiled oracle the int precisions serve from
+#: on CPU fleets. int8-pallas-sharded is covered by tests/test_fleet.py
+#: and the golden fixture.
+MESH_BACKEND = {"float32": "pallas", "int8": "jnp", "int4": "pallas",
+                "binary": "jnp"}
+SCOPES = ["shared", "per-stream"]
+
+
+def _mesh_or_skip(name: str):
+    want = os.environ.get("FLEET_TEST_MESH")
+    if want and name != want:
+        pytest.skip(f"FLEET_TEST_MESH={want} filters out {name}")
+    shape = MESH_SHAPES[name]
+    if shape[0] * shape[1] > jax.device_count():
+        pytest.skip(f"mesh {name} needs {shape[0] * shape[1]} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    return jax.make_mesh(shape, ("data", "model"))
+
+
+def _run_fleet_mesh(precision, scope, mesh_name=None):
+    sc = _scenario()
+    k = ("fleet-mesh", precision, scope, mesh_name)
+    if k not in sc["runs"]:
+        def go():
+            r = FleetRunner(sc["model"], ControllerConfig(hold_frames=2),
+                            chunk_size=4, backend=MESH_BACKEND[precision],
+                            block_d=MESH_BLOCK_D,
+                            adc_bits=PREC_BITS[precision],
+                            precision=precision,
+                            adapt=AdaptConfig(mode="label", lr=0.5,
+                                              scope=scope))
+            s, f, g = r.process(sc["fleet"], labels=sc["fleet_labels"])
+            return s, f, g, np.asarray(r.class_hvs)
+
+        if mesh_name is None:
+            sc["runs"][k] = go()
+        else:
+            from repro.distributed import sharding as shlib
+            with shlib.use_mesh(_mesh_or_skip(mesh_name)):
+                sc["runs"][k] = go()
+    return sc["runs"][k]
+
+
+@pytest.mark.parametrize("scope", SCOPES)
+@pytest.mark.parametrize("precision", PRECISIONS)
+@pytest.mark.parametrize("mesh_name", list(MESH_SHAPES))
+def test_mesh_matrix_bitwise(mesh_name, precision, scope):
+    """Sharded scores, gate decisions, and adapted class_hvs are
+    bitwise-identical to the unsharded runner in every cell — the
+    ordered tile fold + all_gathered shared-scope fold guarantee, not an
+    allclose."""
+    got = _run_fleet_mesh(precision, scope, mesh_name)   # skips w/o mesh
+    want = _run_fleet_mesh(precision, scope, None)
+    for name, a, b in zip(("scores", "fired", "gated", "class_hvs"),
+                          want, got):
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+def test_mesh_matrix_adapts_nontrivially():
+    """The mesh cells' classifiers actually moved — so the class_hvs
+    equality above compares real adapted state, not the initial model."""
+    sc = _scenario()
+    for scope in SCOPES:
+        chvs = _run_fleet_mesh("float32", scope, None)[3]
+        assert not np.allclose(chvs, np.asarray(sc["model"].class_hvs))

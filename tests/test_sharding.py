@@ -140,3 +140,103 @@ def test_param_counts_match_reported_sizes():
         n = common.spec_param_count(lm.build(configs.get_config(arch)
                                              ).spec())
         assert lo <= n <= hi, (arch, n)
+
+
+# ---------------------------------------------------------------------------
+# hyperdim axis: mesh_extent + the D-shard retile invariant
+# ---------------------------------------------------------------------------
+
+def test_hyperdim_rule_registered():
+    """The "hyperdim" logical axis claims the model mesh axis — the rule
+    the 2-D fleet mesh rides on."""
+    assert shlib.DEFAULT_RULES["hyperdim"] == ("model",)
+
+
+def test_mesh_extent_basic(mesh):
+    axes, k = shlib.mesh_extent("hyperdim", mesh)
+    assert axes == ("model",) and k == 1
+    axes, k = shlib.mesh_extent("sensors", mesh)
+    assert axes == ("data",) and k == 1
+
+
+def test_mesh_extent_multiplies_axis_sizes():
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+
+    axes, k = shlib.mesh_extent("hyperdim", FakeMesh())
+    assert axes == ("model",) and k == 2
+    axes, k = shlib.mesh_extent("sensors", FakeMesh())
+    assert axes == ("data",) and k == 4
+
+
+def test_mesh_extent_ignores_divisibility():
+    """Unlike spec_for, mesh_extent reports the raw extent: the fleet
+    uses it to PAD the sensor axis, so divisibility must not zero it."""
+    class FakeMesh:
+        shape = {"data": 8, "model": 1}
+
+    axes, k = shlib.mesh_extent("sensors", FakeMesh())
+    assert axes == ("data",) and k == 8          # S=5 pads to 8, not drops
+
+
+def test_mesh_extent_unknown_or_meshless():
+    assert shlib.mesh_extent("no_such_axis",
+                             jax.make_mesh((1, 1), ("data", "model"))) \
+        == ((), 1)
+    assert shlib.mesh_extent("hyperdim", None) == ((), 1)
+
+    class NoModelMesh:
+        shape = {"data": 4}
+
+    assert shlib.mesh_extent("hyperdim", NoModelMesh()) == ((), 1)
+
+
+try:  # prefer the real library when installed (requirements-dev.txt)
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # fallback keeps these tests running without the dep
+    from _hypothesis_fallback import hypothesis, st
+
+
+@hypothesis.given(st.integers(1, 7), st.integers(0, 2 ** 31 - 1))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_retile_is_dshard_boundary_invariant(cut, seed):
+    """Splitting the geometry's tile axis (the hyperdim shards) and
+    retiling each piece reproduces the full retile bitwise: class tiles
+    are a pure per-tile gather and the cosine norms come from the FULL
+    class vector, so no D-shard boundary can perturb the scoring tiles.
+    This is the invariant that lets the 2-D mesh replicate class_hvs and
+    shard only the geometry."""
+    import numpy as np
+
+    from repro.kernels import sliding_scores as ss
+
+    h, dim, W, w, stride, block_d = 6, 128, 24, 6, 3, 16
+    key = jax.random.PRNGKey(seed)
+    B0 = jax.random.normal(key, (h, dim))
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (dim,))
+    chvs = jax.random.normal(jax.random.fold_in(key, 2), (2, dim))
+    geom = ss.precompute_geometry(B0, b, W=W, w=w, stride=stride,
+                                  block_d=block_d)
+    n_dt = geom.slabs.shape[0]
+    assert n_dt == dim // block_d == 8 and 1 <= cut < n_dt
+
+    full = ss.retile_classes(geom, chvs)
+    import dataclasses
+    parts = []
+    for sl in (slice(0, cut), slice(cut, n_dt)):
+        shard = dataclasses.replace(geom, slabs=geom.slabs[sl],
+                                    bias_t=geom.bias_t[sl],
+                                    idx=geom.idx[sl])
+        parts.append(ss.retile_classes(shard, chvs))
+    np.testing.assert_array_equal(
+        np.asarray(full.cpos_t),
+        np.concatenate([np.asarray(p.cpos_t) for p in parts]))
+    np.testing.assert_array_equal(
+        np.asarray(full.cneg_t),
+        np.concatenate([np.asarray(p.cneg_t) for p in parts]))
+    for p in parts:     # norms are full-D: identical on every shard
+        np.testing.assert_array_equal(np.asarray(full.cpos_norm),
+                                      np.asarray(p.cpos_norm))
+        np.testing.assert_array_equal(np.asarray(full.cneg_norm),
+                                      np.asarray(p.cneg_norm))
