@@ -1,6 +1,6 @@
 .PHONY: test test-shard1 test-shard2 test-cov test-multidevice deps \
 	bench-stream bench-fleet bench-adapt bench-int bench-int4 \
-	bench-control bench bench-mesh
+	bench-control bench bench-mesh bench-serve
 
 deps:
 	pip install -r requirements-dev.txt
@@ -17,7 +17,7 @@ SHARD1_FILES = tests/test_kernels.py tests/test_kernels_batch.py \
 	tests/test_workingset.py tests/test_parity_matrix.py \
 	tests/test_stream.py tests/test_fleet.py \
 	tests/test_sensing.py tests/test_adc_quantize.py tests/test_golden.py \
-	tests/test_sharding.py tests/test_control_loop.py
+	tests/test_sharding.py tests/test_control_loop.py tests/test_serve.py
 SHARD2_FILES = tests/test_arch_smoke.py tests/test_cells.py \
 	tests/test_data_pipeline.py tests/test_gate.py tests/test_hdc_core.py \
 	tests/test_hypersense.py tests/test_online.py tests/test_system.py \
@@ -45,7 +45,7 @@ test-multidevice:
 	$(if $(MESH),FLEET_TEST_MESH=$(MESH)) PYTHONPATH=src \
 	python -m pytest -x -q tests/test_fleet.py tests/test_sharding.py \
 	tests/test_stream.py tests/test_parity_matrix.py tests/test_online.py \
-	tests/test_golden.py
+	tests/test_golden.py tests/test_serve.py
 
 bench-stream:
 	PYTHONPATH=src python benchmarks/stream_throughput.py
@@ -73,6 +73,12 @@ bench-control:
 # certification enforced
 bench-mesh:
 	PYTHONPATH=src python benchmarks/fleet_throughput.py --mesh --check
+
+# the serving-layer gate: async double-buffered FleetService >= synchronous
+# FleetRunner fps, bitwise parity churn-off, zero recompiles under churn,
+# bitwise checkpoint kill-and-resume
+bench-serve:
+	PYTHONPATH=src python benchmarks/serve_throughput.py --check
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

@@ -10,6 +10,7 @@ depend on CRUW are reported next to the paper's numbers with that caveat.
 
 from __future__ import annotations
 
+import json
 import os
 import pickle
 
@@ -115,3 +116,53 @@ def roc_of(scores, labels):
     return {"fpr": fpr, "tpr": tpr, "thr": thr,
             "auc": metrics.auc(fpr, tpr),
             "pauc08": metrics.partial_auc_above_tpr(fpr, tpr, 0.8)}
+
+
+# --- machine-readable results ----------------------------------------------
+# Every benchmark prints CSV rows for humans; `--json PATH` additionally
+# writes the SAME rows as `BENCH_<name>.json` for dashboards/regression
+# tooling. PATH may be a directory (the canonical filename is appended)
+# or an explicit file path. `benchmarks/run.py --json-dir` fans this out
+# across every suite.
+
+def add_json_arg(ap) -> None:
+    """The shared ``--json PATH`` benchmark flag (one spelling, one help
+    string — every benchmark CLI registers it through here)."""
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the result rows as JSON: to "
+                         "PATH/BENCH_<name>.json if PATH is a directory, "
+                         "else to PATH itself")
+
+
+def json_path(arg: str, name: str) -> str:
+    """Resolve the ``--json`` argument to a concrete file path."""
+    if os.path.isdir(arg) or arg.endswith(os.sep):
+        return os.path.join(arg, f"BENCH_{name}.json")
+    return arg
+
+
+def _jsonable(v):
+    if isinstance(v, (np.generic, jnp.ndarray)) and np.ndim(v) == 0:
+        return np.asarray(v).item()
+    if isinstance(v, (np.ndarray, jnp.ndarray, list, tuple)):
+        return [_jsonable(x) for x in np.asarray(v).tolist()]
+    return v
+
+
+def write_json(arg: str, name: str, rows: list[dict],
+               meta: dict | None = None) -> str:
+    """Write ``rows`` (each still carrying its ``name`` key) as
+    ``BENCH_<name>.json``; returns the path written."""
+    path = json_path(arg, name)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    payload = {"benchmark": name,
+               "rows": [{k: _jsonable(v) for k, v in r.items()}
+                        for r in rows]}
+    if meta:
+        payload["meta"] = {k: _jsonable(v) for k, v in meta.items()}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -242,15 +242,28 @@ def main() -> None:
                          "looped-runners frames/sec (the fleet batching "
                          "claim; use --sensors >= 4). With --mesh: gate "
                          "mesh parity and the D=16384 VMEM certification")
+    try:
+        from benchmarks import common   # -m benchmarks.run / repo root
+    except ImportError:
+        import common                   # standalone: script dir on path
+    common.add_json_arg(ap)
     args = ap.parse_args()
     if args.mesh:
-        for row in run_mesh(args.reps, check=args.check):
+        rows = run_mesh(args.reps, check=args.check)
+        if args.json:
+            print("json ->", common.write_json(args.json,
+                                               "fleet_throughput_mesh",
+                                               rows))
+        for row in rows:
             name = row.pop("name")
             print(name + "," + ",".join(f"{k}={v}"
                                         for k, v in row.items()))
         return
     rows = run(args.sensors, args.frames, args.chunk, args.frame_size,
                args.frag, args.stride, args.dim, args.backend, args.reps)
+    if args.json:
+        print("json ->", common.write_json(args.json, "fleet_throughput",
+                                           rows))
     fps = {}
     for row in rows:
         name = row.pop("name")

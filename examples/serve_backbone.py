@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.launch.serve import greedy_decode
+from repro.launch.decode import greedy_decode
 from repro.models import lm
 
 

@@ -122,6 +122,34 @@ def restore(ckpt_dir: str, like, *, step: int | None = None,
     return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
 
 
+def restore_tree(ckpt_dir: str, *, step: int | None = None
+                 ) -> tuple[dict, dict]:
+    """Restore a checkpoint WITHOUT a ``like`` tree.
+
+    The structure-free twin of :func:`restore` for state whose leaf set
+    varies run to run — e.g. the fleet service's parked-slot pool and
+    per-sensor capture logs, where the number of parked sensors at save
+    time is not knowable at restore time. The checkpoint must have been
+    saved from a single-level ``dict`` tree; returns ``({key: np.ndarray},
+    manifest extra)`` with the original dict keys recovered from the
+    path-encoded leaf filenames.
+    """
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    for name in manifest["leaves"]:
+        # single-level dict keys encode as "(key)" (keystr "['key']"
+        # through the filename sanitizer) — undo exactly that
+        key = name[1:-1] if name.startswith("(") and name.endswith(")") \
+            else name
+        leaves[key] = np.load(os.path.join(d, name + ".npy"))
+    return leaves, manifest["extra"]
+
+
 class AsyncCheckpointer:
     """Snapshot-to-host then background write; at most one in flight."""
 

@@ -8,7 +8,7 @@ high-precision-ADC energy does (EXPERIMENTS §Paper/energy).
 
 Pipeline-level (host numpy + jitted per-frame scoring), deliberately
 outside jit: this is the data-loading stage in front of
-``repro.train.loop`` / ``repro.launch.serve``.
+``repro.train.loop`` / ``repro.launch.decode``.
 """
 
 from __future__ import annotations

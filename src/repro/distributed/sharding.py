@@ -144,6 +144,21 @@ def mesh_extent(logical: str, mesh: Mesh | None = None,
     return tuple(out), k
 
 
+def padded_extent(n: int, logical: str, mesh: Mesh | None = None,
+                  rules: dict | None = None) -> int:
+    """Smallest multiple of ``logical``'s mesh extent that is >= ``n``.
+
+    The slot-pool sizing rule: a fixed-capacity pool of ``n`` sensor
+    slots (``repro.launch.serve.FleetService``) is rounded up to the
+    "sensors" extent ONCE at construction, so the padded slot axis
+    shards on any mesh and stream churn (attach/detach/ragged arrival)
+    only ever flips ``slot_mask`` bits — array shapes, and hence the
+    compiled step, never change. Without a mesh this is the identity.
+    """
+    _, k = mesh_extent(logical, mesh, rules)
+    return -(-max(n, 1) // k) * k
+
+
 def _axis_for(logical: str | None, rules: dict, mesh: Mesh,
               dim_size: int, taken: set) -> tuple[str, ...] | None:
     """Resolve one logical dim -> mesh axes, dropping non-divisible or

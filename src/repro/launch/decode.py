@@ -1,0 +1,73 @@
+"""Batched greedy decoding with a prefill-free cache (LM backbones).
+
+Moved out of ``repro.launch.serve`` when that module became the sensor
+fleet's serving layer; the downstream-backbone cascade (ROADMAP) serves
+gated HP frames through models driven by this decode loop.
+
+CPU smoke example:
+  PYTHONPATH=src python -m repro.launch.decode --arch internlm2-1.8b \
+      --smoke --batch 2 --prompt-len 8 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import lm
+
+
+def greedy_decode(model: lm.Model, params, prompts: jax.Array,
+                  gen: int, max_seq: int):
+    """prompts: (b, p) int32. Feeds the prompt token-by-token (cache
+    priming), then generates ``gen`` tokens greedily."""
+    b, p = prompts.shape
+    state = model.init_decode_state(batch=b, max_seq=max_seq)
+
+    step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    tok = prompts[:, 0:1]
+    out = [tok]
+    for t in range(p + gen - 1):
+        logits, state = step(params, state,
+                             lm.DecodeBatch(tokens=tok,
+                                            index=jnp.int32(t)))
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        tok = prompts[:, t + 1:t + 2] if t + 1 < p else nxt.astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke \
+        else configs.get_config(args.arch)
+    if cfg.is_encoder:
+        raise SystemExit("encoder-only arch has no decode step")
+    model = lm.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.time()
+    toks = greedy_decode(model, params, prompts, args.gen,
+                         max_seq=args.prompt_len + args.gen)
+    dt = time.time() - t0
+    n_new = args.batch * args.gen
+    print(f"generated {toks.shape} in {dt:.1f}s "
+          f"({n_new / dt:.1f} tok/s incl. compile)")
+    print(toks[:, :12])
+
+
+if __name__ == "__main__":
+    main()

@@ -126,12 +126,19 @@ def _tiles_specs(tiles, hd: tuple[str, ...] | None):
     return geom_specs(tiles)
 
 
-def _build_step(mesh, axes, hd_axes, tiles_spec, **static):
+def _build_step(mesh, axes, hd_axes, tiles_spec, donate: bool = False,
+                **static):
     """Fleet step callable: the shared module-level jit, or shard_map'd.
 
     Unsharded, this is just :func:`repro.sensing.stream.super_chunk_step`
     with the static config bound — every runner shares its global trace
-    cache. Under a mesh, the raw step body is ``shard_map``'d over BOTH
+    cache. ``donate=True`` (the always-on serving layer,
+    :class:`repro.launch.serve.FleetService`) switches to the donated
+    twin ``super_chunk_step_donated``: the carried ``StreamState``
+    pytree is donated to XLA so a service that steps forever rolls one
+    state allocation instead of reallocating per chunk — callers must
+    never re-read a donated input after the call.
+    Under a mesh, the raw step body is ``shard_map``'d over BOTH
     logical axes — sensors (streams partition like a batch) and hyperdim
     (each device holds a contiguous D-shard of slabs + class tiles) —
     and jitted per (mesh, axes, tiles structure).
@@ -152,7 +159,9 @@ def _build_step(mesh, axes, hd_axes, tiles_spec, **static):
     through.
     """
     if axes is None and hd_axes is None:
-        return functools.partial(super_chunk_step, **static)
+        return functools.partial(
+            stream_mod.super_chunk_step_donated if donate
+            else super_chunk_step, **static)
     from jax.experimental.shard_map import shard_map
     s4, s3, s2, s1 = (P(axes, None, None, None), P(axes, None, None),
                       P(axes, None), P(axes))
@@ -166,7 +175,7 @@ def _build_step(mesh, axes, hd_axes, tiles_spec, **static):
                           hyperdim_axes=hd_axes, **static), mesh=mesh,
         in_specs=(s4, state_in, rep, rep, tiles_spec, rep, rep, s2, s1),
         out_specs=(s2, s2, s2, s2, state_in),
-        check_rep=False))
+        check_rep=False), donate_argnums=(1,) if donate else ())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,21 +283,8 @@ class FleetRunner:
                  adapt: AdaptConfig | None = None,
                  precision: str = "float32",
                  control: CaptureConfig | None = None):
-        if chunk_size < 1:
-            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-        if adc_sigma > 0.0 and adc_bits is None:
-            raise ValueError("adc_sigma > 0 without adc_bits: the ADC is "
-                             "only in the loop when adc_bits is set")
-        if precision not in adc_sim.PRECISIONS:
-            raise ValueError(f"precision must be one of "
-                             f"{adc_sim.PRECISIONS}, got {precision!r}")
-        if precision in adc_sim.INT_PRECISIONS and adc_bits is None:
-            raise ValueError(f'precision="{precision}" consumes ADC codes: '
-                             "set adc_bits (the simulated converter's "
-                             "depth)")
-        if precision == "int4" and adc_bits is not None and adc_bits > 4:
-            raise ValueError(f'precision="int4" packs two codes per byte, '
-                             f"so adc_bits must be <= 4 (got {adc_bits})")
+        stream_mod.validate_runner_args(chunk_size, adc_bits, adc_sigma,
+                                        precision)
         self.precision = precision
         self.model = model
         self.config = config or ControllerConfig()

@@ -109,6 +109,31 @@ def init_stream_state(class_hvs: Array, n_streams: int,
                        frame_idx=jnp.zeros((), jnp.int32))
 
 
+def validate_runner_args(chunk_size: int, adc_bits: int | None,
+                         adc_sigma: float, precision: str) -> None:
+    """Shared constructor validation for every streaming front-end.
+
+    ``StreamRunner``, :class:`~repro.sensing.fleet.FleetRunner` and
+    :class:`~repro.launch.serve.FleetService` all accept the same
+    (chunk, ADC, precision) surface; this is the ONE place its
+    consistency rules live, so the three cannot drift apart.
+    """
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    if adc_sigma > 0.0 and adc_bits is None:
+        raise ValueError("adc_sigma > 0 without adc_bits: the ADC is "
+                         "only in the loop when adc_bits is set")
+    if precision not in adc_sim.PRECISIONS:
+        raise ValueError(f"precision must be one of "
+                         f"{adc_sim.PRECISIONS}, got {precision!r}")
+    if precision in adc_sim.INT_PRECISIONS and adc_bits is None:
+        raise ValueError(f'precision="{precision}" consumes ADC codes: '
+                         "set adc_bits (the simulated converter's depth)")
+    if precision == "int4" and adc_bits is not None and adc_bits > 4:
+        raise ValueError(f'precision="int4" packs two codes per byte, '
+                         f"so adc_bits must be <= 4 (got {adc_bits})")
+
+
 def adc_view(frames: Array, bits: int, *, sigma: float = 0.0,
              key: Array | None = None, start_index: int = 0) -> Array:
     """Low-precision ADC capture of ``(N, H, W)`` frames (paper Fig. 3).
@@ -261,23 +286,28 @@ def resolve_hp_buffer(control: CaptureConfig | None, chunk_size: int,
 
 
 def collect_hp(raw_chunk: Array, gated: Array, n_valid: int, k: int,
-               bits: int, base: int) -> tuple[list[list], int]:
+               bits: int, base) -> tuple[list[list], int]:
     """Drain one chunk's bounded HP buffers to host land.
 
     ``raw_chunk`` is ``(S, C, H, W)`` (padded to the chunk size), ``gated``
-    the step's ``(S, C)`` gate output. Returns (one
-    ``[(absolute_frame_idx, hp_frame), ...]`` list per stream — in frame
-    order — and the number of burst frames dropped to full buffers);
-    shared by both runners so the drop accounting can never diverge.
+    the step's ``(S, C)`` gate output. ``base`` offsets the in-chunk frame
+    positions to absolute stream indices — a scalar when every stream sits
+    at the same absolute frame (the runners), or an ``(S,)`` vector when
+    streams run out of phase (the serving layer's ragged slots). Returns
+    (one ``[(absolute_frame_idx, hp_frame), ...]`` list per stream — in
+    frame order — and the number of burst frames dropped to full
+    buffers); shared by every front-end so the drop accounting can never
+    diverge.
     """
     buf, idx, cnt = jax.vmap(
         lambda r, gt: hp_capture(r, gt, jnp.int32(n_valid), k, bits))(
             raw_chunk, gated)
     idx, buf = np.asarray(idx), np.asarray(buf)
+    base = np.broadcast_to(np.asarray(base, np.int64), (idx.shape[0],))
     out, dropped = [], 0
     for si in range(idx.shape[0]):
         kept = idx[si] >= 0
-        out.append(list(zip((base + idx[si][kept]).tolist(),
+        out.append(list(zip((base[si] + idx[si][kept]).tolist(),
                             buf[si][kept])))
         dropped += max(int(cnt[si]) - int(kept.sum()), 0)
     return out, dropped
@@ -312,6 +342,7 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
                    adapt: AdaptConfig | None = None,
                    precision: str = "float32", adc_lsb: float = 1.0,
                    decim: int | None = None,
+                   park_masked: bool = False,
                    sensor_axes: tuple[str, ...] | None = None,
                    hyperdim_axes: tuple[str, ...] | None = None):
     """One streaming step over an ``(S, C, H, W)`` super-chunk.
@@ -368,6 +399,16 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     fallback). Masked slots never fire, never sample, and never
     contribute to a shared-scope update — their presence is an exact
     no-op on every real slot's outputs and on the shared classifier.
+
+    ``park_masked`` additionally freezes the masked slots' *carried
+    state* in place: their hold/phase counters (which would otherwise
+    decay through the chunk) and, in per-stream scope, their classifier
+    rows pass through unchanged. This is the serving layer's slot-pool
+    semantics (:class:`repro.launch.serve.FleetService`): a sensor that
+    sent no frames this tick experienced no time, so a later reattach
+    resumes exactly where it detached. With an all-true ``slot_mask``
+    the selects are identities — the parked step is bitwise the plain
+    one, which is what lets the service share this trace.
 
     ``sensor_axes`` / ``hyperdim_axes`` name the mesh axes this step is
     ``shard_map``'d over (None outside a mesh). ``hyperdim_axes`` flows
@@ -534,6 +575,16 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
             else:
                 class_hvs = _shared_fold(class_hvs, hv, labels, seen)
 
+    if park_masked and slot_mask is not None:
+        # slot-pool semantics: a masked slot's carried state is parked in
+        # place — no hold/phase decay, no classifier churn — so detached
+        # or silent sensors resume bitwise where they stopped
+        hold_out = jnp.where(slot_mask, hold_out, state.holds)
+        phase_out = jnp.where(slot_mask, phase_out, state.phases)
+        if class_hvs.ndim == 3:
+            class_hvs = jnp.where(slot_mask[:, None, None], class_hvs,
+                                  state.class_hvs)
+
     new_state = StreamState(class_hvs=class_hvs, holds=hold_out,
                             phases=phase_out,
                             frame_idx=state.frame_idx
@@ -541,13 +592,26 @@ def super_chunk_fn(frames, state: StreamState, B0, b, tiles, t_score,
     return scores, fired, gated, sampled, new_state
 
 
+_STEP_STATIC = ("h", "w", "stride", "nonlinearity", "t_detection",
+                "hold_frames", "backend", "adapt", "precision", "adc_lsb",
+                "decim", "park_masked", "sensor_axes", "hyperdim_axes")
+
 #: module-level jit: every runner instance shares one trace cache.
-super_chunk_step = jax.jit(
-    super_chunk_fn, static_argnames=("h", "w", "stride", "nonlinearity",
-                                     "t_detection", "hold_frames",
-                                     "backend", "adapt", "precision",
-                                     "adc_lsb", "decim", "sensor_axes",
-                                     "hyperdim_axes"))
+super_chunk_step = jax.jit(super_chunk_fn, static_argnames=_STEP_STATIC)
+
+#: the serving twin: identical trace, but the carried
+#: :class:`StreamState` (arg 1) is DONATED — XLA aliases it into the
+#: step's output state, so a long-running
+#: :class:`repro.launch.serve.FleetService` rolls one state allocation
+#: forever instead of allocating per chunk. (The super-chunk buffer
+#: itself is donated one stage earlier, at the service's ADC-convert
+#: jit, where input and output shapes actually alias; no step output
+#: matches the ``(S, C, H, W)`` frames, so donating arg 0 here could
+#: never be used.) Donated inputs are dead after the call; only the
+#: service (which never re-reads its carried state) may use this.
+super_chunk_step_donated = jax.jit(super_chunk_fn,
+                                   static_argnames=_STEP_STATIC,
+                                   donate_argnums=(1,))
 
 
 def model_geometry(model: HyperSenseModel, W: int, block_d: int,
@@ -617,21 +681,7 @@ class StreamRunner:
                  adapt: AdaptConfig | None = None,
                  precision: str = "float32",
                  control: CaptureConfig | None = None):
-        if chunk_size < 1:
-            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-        if adc_sigma > 0.0 and adc_bits is None:
-            raise ValueError("adc_sigma > 0 without adc_bits: the ADC is "
-                             "only in the loop when adc_bits is set")
-        if precision not in adc_sim.PRECISIONS:
-            raise ValueError(f"precision must be one of "
-                             f"{adc_sim.PRECISIONS}, got {precision!r}")
-        if precision in adc_sim.INT_PRECISIONS and adc_bits is None:
-            raise ValueError(f'precision="{precision}" consumes ADC codes: '
-                             "set adc_bits (the simulated converter's "
-                             "depth)")
-        if precision == "int4" and adc_bits is not None and adc_bits > 4:
-            raise ValueError(f'precision="int4" packs two codes per byte, '
-                             f"so adc_bits must be <= 4 (got {adc_bits})")
+        validate_runner_args(chunk_size, adc_bits, adc_sigma, precision)
         if adapt is not None and adapt.scope == "per-stream":
             raise ValueError('scope="per-stream" is a FleetRunner mode; '
                              "a StreamRunner has exactly one stream — "
