@@ -1,6 +1,6 @@
 .PHONY: test test-shard1 test-shard2 test-cov test-multidevice deps \
 	bench-stream bench-fleet bench-adapt bench-int bench-int4 \
-	bench-control bench bench-mesh bench-serve
+	bench-control bench bench-mesh bench-serve bench-cascade
 
 deps:
 	pip install -r requirements-dev.txt
@@ -17,7 +17,8 @@ SHARD1_FILES = tests/test_kernels.py tests/test_kernels_batch.py \
 	tests/test_workingset.py tests/test_parity_matrix.py \
 	tests/test_stream.py tests/test_fleet.py \
 	tests/test_sensing.py tests/test_adc_quantize.py tests/test_golden.py \
-	tests/test_sharding.py tests/test_control_loop.py tests/test_serve.py
+	tests/test_sharding.py tests/test_control_loop.py tests/test_serve.py \
+	tests/test_cascade.py
 SHARD2_FILES = tests/test_arch_smoke.py tests/test_cells.py \
 	tests/test_data_pipeline.py tests/test_gate.py tests/test_hdc_core.py \
 	tests/test_hypersense.py tests/test_online.py tests/test_system.py \
@@ -79,6 +80,13 @@ bench-mesh:
 # bitwise checkpoint kill-and-resume
 bench-serve:
 	PYTHONPATH=src python benchmarks/serve_throughput.py --check
+
+# the full-loop gate → detector cascade gate: batched async backbone
+# serving bitwise-equal to eager per-frame evaluation, exactly one
+# backbone compile across ragged HP drains, duty-cycled system energy
+# strictly below the always-on backbone at matched missed positives
+bench-cascade:
+	PYTHONPATH=src python -m benchmarks.fig16_speedup --system --check
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run

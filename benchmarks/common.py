@@ -13,6 +13,7 @@ from __future__ import annotations
 import json
 import os
 import pickle
+import time
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +110,22 @@ def hdc_model(size: int = 16, dim: int = DEFAULT_DIM,
         return model, info, scores, lte
 
     return cached(f"hdc_{size}_{dim}", build)
+
+
+def timed(fn, *args, reps: int = 3) -> float:
+    """Mean seconds per call, compiled/warm, **synced every rep**.
+
+    JAX dispatch is async: timing a loop of un-synced calls and blocking
+    only on the last result measures enqueue cost for reps-1 of them and
+    lets later dispatches overlap earlier compute — a systematic
+    under-estimate. Every benchmark times through here so each rep pays
+    its own ``block_until_ready()``.
+    """
+    jax.block_until_ready(fn(*args))       # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
 
 
 def roc_of(scores, labels):

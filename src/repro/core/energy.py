@@ -168,8 +168,39 @@ def adc_conversion_j(bits: int, params: EnergyParams = EnergyParams()
     return params.adc_hp_j * (2.0 ** (bits - params.adc_hp_bits))
 
 
+def _resolve_log_bits(log, params: EnergyParams,
+                      on_missing_bits: str) -> tuple[int, int]:
+    """The explicit ``None``-depth policy for capture-log billing.
+
+    A log records ``lp_bits``/``hp_bits`` = ``None`` when the runner had
+    no explicit depth configured (open loop: ``adc_bits=None`` /
+    ``control=None``). Billing must decide what that means — callers must
+    NOT paper over it by substituting depths themselves:
+
+    * ``"params"`` — the open-loop convention: bill at the
+      :class:`EnergyParams` default depths. This is what makes an
+      open-loop run reduce exactly to :func:`hypersense_measured`.
+    * ``"error"`` — refuse: the caller claims to know the real burst
+      depth (e.g. the gated cascade billing actual backbone input), so a
+      ``None`` is a wiring bug, not a convention.
+    """
+    if on_missing_bits not in ("params", "error"):
+        raise ValueError(f"on_missing_bits must be 'params' or 'error', "
+                         f"got {on_missing_bits!r}")
+    if on_missing_bits == "error" and log.hp_bits is None:
+        raise ValueError(
+            "capture log has hp_bits=None (open-loop run: no "
+            "CaptureConfig) but this billing requires the real burst "
+            "depth — run the producer with control=CaptureConfig(...) or "
+            "bill with on_missing_bits='params'")
+    lp_bits = params.adc_lp_bits if log.lp_bits is None else log.lp_bits
+    hp_bits = params.adc_hp_bits if log.hp_bits is None else log.hp_bits
+    return lp_bits, hp_bits
+
+
 def from_capture_log(log, params: EnergyParams | None = None,
-                     precision: str = "float32") -> EnergyBreakdown:
+                     precision: str = "float32",
+                     on_missing_bits: str = "params") -> EnergyBreakdown:
     """Per-frame mean energy billed from what was *actually* captured.
 
     ``log`` is a :class:`~repro.core.sensor_control.CaptureLog` (duck —
@@ -182,6 +213,11 @@ def from_capture_log(log, params: EnergyParams | None = None,
     frames, the LP-side energy drops below the always-on term
     ``adc_lp_j + hdc_accel_j`` that approximation bills unconditionally.
 
+    ``None`` depths are handled here, explicitly, by ``on_missing_bits``
+    (see :func:`_resolve_log_bits`) — never by the log's producer: the
+    default ``"params"`` is the open-loop convention, ``"error"`` rejects
+    logs without a real recorded burst depth.
+
     When every frame is sampled and the log's depths equal the params'
     (the open-loop regime), this reduces *exactly* to
     ``hypersense_measured(duty)`` — asserted bitwise in
@@ -190,8 +226,7 @@ def from_capture_log(log, params: EnergyParams | None = None,
     params = params or EnergyParams()
     sampled = np.asarray(log.sampled, bool)
     gated = np.asarray(log.gated, bool)
-    lp_bits = params.adc_lp_bits if log.lp_bits is None else log.lp_bits
-    hp_bits = params.adc_hp_bits if log.hp_bits is None else log.hp_bits
+    lp_bits, hp_bits = _resolve_log_bits(log, params, on_missing_bits)
     f_lp = float(sampled.mean())        # fraction of frames LP-converted
     duty = float(gated.mean())          # fraction HP-converted+transmitted
     hdc = _hdc_j(params, precision)
@@ -203,6 +238,89 @@ def from_capture_log(log, params: EnergyParams | None = None,
         comm=duty * params.comm_j,
         cloud=duty * params.cloud_j,
     )
+
+
+# ---------------------------------------------------------------------------
+# Downstream-backbone cost (the gated cascade's "cloud" term)
+# ---------------------------------------------------------------------------
+
+#: Effective edge-accelerator energy per FLOP for the downstream backbone.
+#: Grounded on Jetson AGX Orin-class sustained efficiency (the paper's
+#: end-to-end comparison platform): ~5 TFLOP/s FP32 useful throughput at
+#: ~40 W wall → ~8 pJ/FLOP. A constant, like the other per-component
+#: Joules above — the cascade claims are *ratios* (duty × backbone vs
+#: always-on backbone), which a shared constant cancels out of.
+EDGE_J_PER_FLOP = 8e-12
+
+
+@dataclass(frozen=True)
+class BackboneCost:
+    """Measured per-frame cost of the downstream detector/backbone.
+
+    ``flops``/``bytes`` come from the compiled step's XLA
+    ``cost_analysis()`` divided by its batch size;
+    ``joules = flops * j_per_flop`` is the energy the cascade bills per
+    frame the gate lets through (the term that replaces the 3G+cloud
+    ``cloud_j`` when the backbone runs on-device next to the gate).
+    """
+    flops: float
+    bytes: float
+    joules: float
+
+
+def backbone_cost(compiled, batch: int, *,
+                  j_per_flop: float = EDGE_J_PER_FLOP) -> BackboneCost:
+    """Per-frame :class:`BackboneCost` from a compiled backbone step.
+
+    ``compiled`` is a ``jax.stages.Compiled`` whose step processes
+    ``batch`` frames; FLOPs/bytes are read from ``cost_analysis()`` (the
+    same source the roofline model uses) and amortized per frame.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) / batch
+    nbytes = float(cost.get("bytes accessed", 0.0)) / batch
+    return BackboneCost(flops=flops, bytes=nbytes,
+                        joules=flops * j_per_flop)
+
+
+def cascade_system(log, backbone: BackboneCost,
+                   params: EnergyParams | None = None,
+                   precision: str = "float32") -> EnergyBreakdown:
+    """Per-frame energy of the full gate→backbone cascade (paper §V-E).
+
+    The capture-log account (:func:`from_capture_log`) with the
+    gated-path downstream swapped for the *measured* backbone: the
+    backbone runs co-located with the gate, so the 3G transmission and
+    cloud terms vanish and ``cloud`` becomes
+    ``duty × backbone.joules`` — gate duty cycle × backbone cost, the
+    paper's system-level arithmetic. Requires a real recorded burst
+    depth (``on_missing_bits="error"``): a cascade is by construction a
+    closed-loop producer, so ``hp_bits=None`` here is a wiring bug.
+    """
+    params = params or EnergyParams()
+    base = from_capture_log(log, params, precision,
+                            on_missing_bits="error")
+    duty = float(np.asarray(log.gated, bool).mean())
+    return EnergyBreakdown(sensor=base.sensor, adc=base.adc, hdc=base.hdc,
+                           comm=0.0, cloud=duty * backbone.joules)
+
+
+def always_on_backbone(backbone: BackboneCost,
+                       params: EnergyParams | None = None
+                       ) -> EnergyBreakdown:
+    """Per-frame energy of the cascade's baseline: no gate, the
+    high-precision ADC converts every frame and the backbone processes
+    every frame (duty ≡ 1, no HDC, no transmission — same co-located
+    deployment as :func:`cascade_system`, so the two differ only in
+    what the gate saves)."""
+    params = params or EnergyParams()
+    return EnergyBreakdown(sensor=params.rf_frontend_j,
+                           adc=params.adc_hp_j, hdc=0.0, comm=0.0,
+                           cloud=backbone.joules)
 
 
 def savings(ours: EnergyBreakdown, base: EnergyBreakdown) -> dict:

@@ -104,6 +104,36 @@ class CaptureLog:
                    * self.frame_pixels)
 
 
+def assemble_capture_log(sampled_blocks, gated_blocks, *,
+                         lp_bits: int | None,
+                         control: CaptureConfig | None,
+                         frame_pixels: int, axis: int = 0) -> CaptureLog:
+    """Build a :class:`CaptureLog` from a runner's per-chunk blocks.
+
+    The ONE place every stream front-end (``StreamRunner``,
+    ``FleetRunner``, ``FleetService``) assembles its billing log, so the
+    ``hp_bits`` convention cannot drift between them: ``control=None``
+    (open loop) records ``hp_bits=None`` — billing-time code decides what
+    that means (see :func:`repro.core.energy.from_capture_log`); a
+    closed-loop runner records ``control.hp_bits``, the depth its HP
+    bursts were actually converted at.
+
+    ``axis`` is the frame axis blocks concatenate along: 0 for ``(n,)``
+    single-stream blocks, 1 for ``(S, n)`` fleet blocks. With no blocks
+    yet the arrays are empty with the right rank (``(0,)`` / ``(0, 0)``).
+    """
+    def cat(blocks):
+        if blocks:
+            return np.concatenate([np.asarray(b, bool) for b in blocks],
+                                  axis=axis)
+        return np.zeros((0,) * (axis + 1), bool)
+
+    return CaptureLog(sampled=cat(sampled_blocks), gated=cat(gated_blocks),
+                      lp_bits=lp_bits,
+                      hp_bits=None if control is None else control.hp_bits,
+                      frame_pixels=frame_pixels)
+
+
 @dataclass
 class StreamStats:
     """Per-stream gate accounting.

@@ -70,7 +70,8 @@ from repro.ckpt import checkpoint as ckpt_mod
 from repro.core.hypersense import HyperSenseModel
 from repro.core.online import AdaptConfig
 from repro.core.sensor_control import (CaptureConfig, CaptureLog,
-                                       ControllerConfig, decimation)
+                                       ControllerConfig,
+                                       assemble_capture_log, decimation)
 from repro.distributed import sharding as shlib
 from repro.sensing import adc as adc_sim
 from repro.sensing import fleet as fleet_mod
@@ -589,21 +590,19 @@ class FleetService:
         """What ``sid``'s ADC actually converted so far (per-sensor
         billing ground truth; survives detach and checkpoint/restore)."""
         blocks = self._logs[sid]
-        cat = (lambda xs: np.concatenate(xs) if xs
-               else np.zeros((0,), bool))
-        return CaptureLog(sampled=cat(blocks[0]), gated=cat(blocks[1]),
-                          lp_bits=self.adc_bits,
-                          hp_bits=(self.control.hp_bits
-                                   if self.control is not None else None),
-                          frame_pixels=self._frame_pixels)
+        return assemble_capture_log(blocks[0], blocks[1],
+                                    lp_bits=self.adc_bits,
+                                    control=self.control,
+                                    frame_pixels=self._frame_pixels)
 
     def drain_hp(self, sid) -> tuple[np.ndarray, np.ndarray]:
         """Take ``sid``'s high-precision burst frames captured so far
-        (absolute frame indices + frames at ``control.hp_bits``)."""
-        entries = self._hp[sid]
-        idx = np.asarray([i for i, _ in entries], np.int64)
-        frames = (np.stack([fr for _, fr in entries]) if entries
-                  else np.zeros((0, 0, 0), np.float32))
+        (absolute frame indices + frames at ``control.hp_bits``). An
+        empty drain keeps the real ``(0, H, W)`` frame shape
+        (:func:`~repro.sensing.stream.hp_drain_arrays`) so cross-drain
+        concatenation works — the cascade's contract."""
+        idx, frames = stream_mod.hp_drain_arrays(self._hp[sid],
+                                                 self._frame_hw)
         self._hp[sid] = []
         return idx, frames
 
@@ -632,6 +631,13 @@ class FleetService:
             tree[f"log_gated_{i}"] = (np.concatenate(blocks[1])
                                       if blocks[1]
                                       else np.zeros((0,), bool))
+            # undrained HP burst frames ride the checkpoint too: the
+            # cascade's deliverable must survive kill-and-resume, not
+            # just the billing that accounts for it
+            hp_idx, hp_frames = stream_mod.hp_drain_arrays(
+                self._hp.get(sid, []), self._frame_hw)
+            tree[f"hp_idx_{i}"] = hp_idx
+            tree[f"hp_frames_{i}"] = hp_frames
         extra = {
             "chunks": self._seq,
             "slots": [[i, sid, self._uids[sid], self._n_seen[sid]]
@@ -720,7 +726,12 @@ class FleetService:
                                if leaves[f"log_sampled_{i}"].size else [],
                                [leaves[f"log_gated_{i}"]]
                                if leaves[f"log_gated_{i}"].size else [])
-            self._hp.setdefault(sid, [])
+            if f"hp_idx_{i}" in leaves:        # absent in pre-cascade ckpts
+                self._hp[sid] = list(zip(
+                    leaves[f"hp_idx_{i}"].tolist(),
+                    leaves[f"hp_frames_{i}"].astype(np.float32)))
+            else:
+                self._hp[sid] = []
         self._next_uid = extra["next_uid"]
         self._seq = extra["chunks"]
         if extra["frame_hw"]:

@@ -9,6 +9,11 @@ Cells:
 * train  — full train step: loss + grads + AdamW update (donated state)
 * prefill — forward logits over the full sequence
 * decode — one-token serve step against a pre-filled KV cache / SSM state
+* detector — fixed-batch frame classifier over an embeds-in backbone:
+  the gated cascade's downstream step
+  (:class:`repro.launch.cascade.CascadeService` batches HP frames
+  drained from the gate runners through it — the gate→detect loop the
+  paper serves end to end)
 """
 
 from __future__ import annotations
@@ -209,6 +214,109 @@ def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
         abstract_args=(p_abs, st_abs, db_abs),
         donate_argnums=(1,),
     )
+
+
+def detector_seq_len(frame_hw: tuple[int, int], patch: int) -> int:
+    """Patch-token sequence length a detector frame unrolls to."""
+    H, W = frame_hw
+    if patch < 1 or H % patch or W % patch:
+        raise ValueError(f"patch {patch} must divide frame {frame_hw}")
+    return (H // patch) * (W // patch)
+
+
+def build_detector_cell(cfg: ModelConfig, *, batch: int,
+                        frame_hw: tuple[int, int], patch: int,
+                        n_out: int = 2, mesh=None, rules=None) -> Cell:
+    """Downstream-backbone detector step for the gated cascade.
+
+    ``detector_step(params, frames)``: a fixed ``(batch, H, W)`` float32
+    block of HP frames → ``(batch, n_out)`` float32 class logits. Each
+    frame is patchified to ``seq = (H/patch)*(W/patch)`` tokens, linearly
+    embedded (``params["embedder"]``: ``proj (patch², d_model)`` +
+    ``pos (seq, d_model)``), and run through an **embeds-in** LM backbone
+    (``params["backbone"]``); the last position's first ``n_out`` vocab
+    logits are the detection head (at smoke scale the backbone is the
+    hubert-style encoder — the cascade's stand-in for the paper's YOLO
+    detector).
+
+    The batch axis is ``jax.lax.map``, NOT ``vmap``: every row executes
+    the identical unbatched program, so a frame's logits are bitwise
+    independent of its batch position and of whatever else shares the
+    batch — including zero-padded slack rows. That, by construction, is
+    the cascade's parity gate (batched service output ≡ eager per-frame
+    evaluation, ``benchmarks/fig16_speedup.py --system --check``); a
+    vmapped/batched dot would reassociate with the batch extent (see
+    ``fleet._per_stream_fold`` for the precedent).
+
+    With a ``mesh`` the backbone params shard via ``param_shardings``
+    (frames and the tiny embedder replicate); ``mesh=None`` builds an
+    unsharded cell with ``None`` shardings.
+    """
+    if not cfg.embeds_in:
+        raise ValueError(f"{cfg.arch_id}: detector backbone needs an "
+                         "embeds-in config (the patch embedder replaces "
+                         "the token embedding)")
+    if n_out < 1 or n_out > cfg.vocab:
+        raise ValueError(f"n_out {n_out} must be in [1, vocab={cfg.vocab}]")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    model = lm.build(cfg)
+    H, W = frame_hw
+    seq = detector_seq_len(frame_hw, patch)
+
+    def one_frame(params, frame):
+        p = frame.reshape(H // patch, patch, W // patch, patch)
+        p = p.transpose(0, 2, 1, 3).reshape(seq, patch * patch)
+        emb = (p.astype(jnp.float32) @ params["embedder"]["proj"]
+               + params["embedder"]["pos"])
+        b1 = Batch(tokens=None, labels=jnp.zeros((1, seq), jnp.int32),
+                   embeds=emb[None].astype(model.compute_dtype))
+        logits, _ = model.forward(params["backbone"], b1)
+        return logits[0, -1, :n_out].astype(jnp.float32)
+
+    def detector_step(params, frames):
+        return jax.lax.map(lambda f: one_frame(params, f), frames)
+
+    p_abs = {
+        "backbone": model.abstract_params(),
+        "embedder": {
+            "proj": _sds((patch * patch, cfg.d_model), jnp.float32),
+            "pos": _sds((seq, cfg.d_model), jnp.float32),
+        },
+    }
+    f_abs = _sds((batch, H, W), jnp.float32)
+    if mesh is None:
+        return Cell(step_fn=detector_step, in_shardings=None,
+                    out_shardings=None, abstract_args=(p_abs, f_abs),
+                    donate_argnums=())
+    p_sh = {
+        "backbone": model.param_shardings(mesh, rules),
+        "embedder": {"proj": _replicated(mesh), "pos": _replicated(mesh)},
+    }
+    return Cell(step_fn=detector_step,
+                in_shardings=(p_sh, _replicated(mesh)),
+                out_shardings=_replicated(mesh),
+                abstract_args=(p_abs, f_abs),
+                donate_argnums=())
+
+
+def init_detector_params(key, cfg: ModelConfig, *,
+                         frame_hw: tuple[int, int], patch: int) -> dict:
+    """Concrete detector params matching :func:`build_detector_cell`."""
+    model = lm.build(cfg)
+    seq = detector_seq_len(frame_hw, patch)
+    k_b, k_p, k_q = jax.random.split(jax.random.PRNGKey(0)
+                                     if isinstance(key, int) else key, 3)
+    scale = 1.0 / float(patch)
+    return {
+        "backbone": model.init(k_b),
+        "embedder": {
+            "proj": scale * jax.random.normal(
+                k_p, (patch * patch, cfg.d_model), jnp.float32),
+            "pos": 0.02 * jax.random.normal(
+                k_q, (seq, cfg.d_model), jnp.float32),
+        },
+    }
 
 
 def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,

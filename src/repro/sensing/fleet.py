@@ -48,7 +48,8 @@ from repro.core.hypersense import HyperSenseModel
 from repro.core.online import AdaptConfig
 from repro.core.sensor_control import (CaptureConfig, CaptureLog,
                                        ControllerConfig, StreamStats,
-                                       decimation, stats_from_batch)
+                                       assemble_capture_log, decimation,
+                                       stats_from_batch)
 from repro.distributed import sharding as shlib
 from repro.sensing import adc as adc_sim
 from repro.sensing import stream as stream_mod
@@ -312,6 +313,7 @@ class FleetRunner:
         self._log_sampled: list[np.ndarray] = []   # (S, chunk) blocks
         self._log_gated: list[np.ndarray] = []
         self._frame_pixels = 0
+        self._frame_hw: tuple[int, int] | None = None
         self._hp: list[list] = []   # per stream: [(abs_idx, frame), ...]
         self.hp_dropped = 0
 
@@ -395,14 +397,11 @@ class FleetRunner:
     def capture_log(self) -> CaptureLog:
         """(S, N) record of what each stream's ADC actually converted —
         the billing ground truth :func:`fleet_report` prefers."""
-        cat = (lambda xs: np.concatenate(xs, axis=1) if xs
-               else np.zeros((0, 0), bool))
-        return CaptureLog(sampled=cat(self._log_sampled),
-                          gated=cat(self._log_gated),
-                          lp_bits=self.adc_bits,
-                          hp_bits=(self.control.hp_bits
-                                   if self.control is not None else None),
-                          frame_pixels=self._frame_pixels)
+        return assemble_capture_log(self._log_sampled, self._log_gated,
+                                    lp_bits=self.adc_bits,
+                                    control=self.control,
+                                    frame_pixels=self._frame_pixels,
+                                    axis=1)
 
     def drain_hp(self) -> list[tuple[np.ndarray, np.ndarray]]:
         """Per-stream HP burst deliverables captured so far.
@@ -410,14 +409,13 @@ class FleetRunner:
         Returns one ``(indices (M_s,), frames (M_s, H, W))`` pair per
         stream (absolute frame indices; frames at ``control.hp_bits``)
         and empties the buffers. Per-chunk buffer overflows are counted
-        fleet-wide in ``hp_dropped``.
+        fleet-wide in ``hp_dropped``. Empty drains keep the real
+        ``(0, H, W)`` frame shape
+        (:func:`~repro.sensing.stream.hp_drain_arrays`) so per-stream
+        cross-drain concatenation works.
         """
-        out = []
-        for entries in self._hp:
-            idx = np.asarray([i for i, _ in entries], np.int64)
-            frames = (np.stack([f for _, f in entries]) if entries
-                      else np.zeros((0, 0, 0), np.float32))
-            out.append((idx, frames))
+        out = [stream_mod.hp_drain_arrays(entries, self._frame_hw)
+               for entries in self._hp]
         self._hp = [[] for _ in self._hp]
         return out
 
@@ -462,6 +460,7 @@ class FleetRunner:
         S, n = frames.shape[:2]
         raw = frames
         self._frame_pixels = int(frames.shape[-2] * frames.shape[-1])
+        self._frame_hw = (int(frames.shape[-2]), int(frames.shape[-1]))
         hp_k = stream_mod.resolve_hp_buffer(self.control, self.chunk_size,
                                             frames.dtype)
         if not self._hp:

@@ -73,7 +73,8 @@ from repro.core.hypersense import HyperSenseModel, frame_detection_score
 from repro.core.online import AdaptConfig
 from repro.core.sensor_control import (CaptureConfig, CaptureLog,
                                        ControllerConfig, StreamStats,
-                                       decimation, stats_from)
+                                       assemble_capture_log, decimation,
+                                       stats_from)
 from repro.sensing import adc as adc_sim
 
 Array = jax.Array
@@ -311,6 +312,28 @@ def collect_hp(raw_chunk: Array, gated: Array, n_valid: int, k: int,
                             buf[si][kept])))
         dropped += max(int(cnt[si]) - int(kept.sum()), 0)
     return out, dropped
+
+
+def hp_drain_arrays(entries, frame_hw: tuple[int, int] | None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """One stream's ``[(abs_idx, frame), ...]`` buffer → drain arrays.
+
+    The drain-shape contract every front-end shares: ``(indices (M,)
+    int64, frames (M, H, W) float32)`` — an EMPTY drain still carries
+    the real frame shape ``(0, H, W)`` (float32 is the ``hp_bits``
+    dtype: :func:`hp_capture` materializes bursts as float32
+    reconstructions at ``control.hp_bits``), so a consumer can
+    ``np.concatenate`` drains across ticks unconditionally — exactly
+    what the gated cascade does. Only before any frame has fixed the
+    shape (``frame_hw=None``) is the degenerate ``(0, 0, 0)`` returned.
+    """
+    idx = np.asarray([i for i, _ in entries], np.int64)
+    if entries:
+        frames = np.stack([np.asarray(f, np.float32) for _, f in entries])
+    else:
+        hw = (0, 0) if frame_hw is None else tuple(frame_hw)
+        frames = np.zeros((0, *hw), np.float32)
+    return idx, frames
 
 
 def _top_fragment_hvs(frames: Array, maps: Array, B0: Array, b: Array, *,
@@ -710,6 +733,7 @@ class StreamRunner:
         self._log_sampled: list[np.ndarray] = []
         self._log_gated: list[np.ndarray] = []
         self._frame_pixels = 0
+        self._frame_hw: tuple[int, int] | None = None
         self._hp_idx: list[int] = []
         self._hp_frames: list[np.ndarray] = []
         self.hp_dropped = 0     # burst frames lost to a full HP buffer
@@ -773,25 +797,22 @@ class StreamRunner:
         """What the ADC actually converted so far (across ``process``
         calls; cleared by :meth:`reset`) — the billing ground truth for
         :func:`repro.core.energy.from_capture_log`."""
-        cat = (lambda xs: np.concatenate(xs) if xs
-               else np.zeros((0,), bool))
-        return CaptureLog(sampled=cat(self._log_sampled),
-                          gated=cat(self._log_gated),
-                          lp_bits=self.adc_bits,
-                          hp_bits=(self.control.hp_bits
-                                   if self.control is not None else None),
-                          frame_pixels=self._frame_pixels)
+        return assemble_capture_log(self._log_sampled, self._log_gated,
+                                    lp_bits=self.adc_bits,
+                                    control=self.control,
+                                    frame_pixels=self._frame_pixels)
 
     def drain_hp(self) -> tuple[np.ndarray, np.ndarray]:
         """Take the high-precision burst frames captured so far.
 
         Returns ``(indices (M,) — absolute frame indices, frames
         (M, H, W) at control.hp_bits)`` and empties the buffer; frames a
-        full per-chunk buffer dropped are counted in ``hp_dropped``.
+        full per-chunk buffer dropped are counted in ``hp_dropped``. An
+        empty drain keeps the real ``(0, H, W)`` frame shape
+        (:func:`hp_drain_arrays`) so cross-drain concatenation works.
         """
-        idx = np.asarray(self._hp_idx, np.int64)
-        frames = (np.stack(self._hp_frames) if self._hp_frames
-                  else np.zeros((0, 0, 0), np.float32))
+        idx, frames = hp_drain_arrays(
+            list(zip(self._hp_idx, self._hp_frames)), self._frame_hw)
         self._hp_idx, self._hp_frames = [], []
         return idx, frames
 
@@ -812,6 +833,7 @@ class StreamRunner:
         frames = jnp.asarray(frames)
         raw = frames
         self._frame_pixels = int(frames.shape[-2] * frames.shape[-1])
+        self._frame_hw = (int(frames.shape[-2]), int(frames.shape[-1]))
         hp_k = resolve_hp_buffer(self.control, self.chunk_size,
                                  frames.dtype)
         base = self._n_seen
