@@ -1,4 +1,5 @@
 .PHONY: test test-shard1 test-shard2 test-cov test-multidevice deps \
+	lint test-sanitize \
 	bench-stream bench-fleet bench-adapt bench-int bench-int4 \
 	bench-control bench bench-mesh bench-serve bench-cascade
 
@@ -22,7 +23,8 @@ SHARD1_FILES = tests/test_kernels.py tests/test_kernels_batch.py \
 SHARD2_FILES = tests/test_arch_smoke.py tests/test_cells.py \
 	tests/test_data_pipeline.py tests/test_gate.py tests/test_hdc_core.py \
 	tests/test_hypersense.py tests/test_online.py tests/test_system.py \
-	tests/test_train_runtime.py tests/test_ci_shards.py
+	tests/test_train_runtime.py tests/test_ci_shards.py \
+	tests/test_analysis.py
 
 # PYTEST_EXTRA lets CI attach coverage flags (see .github/workflows/ci.yml);
 # plain local runs need no pytest-cov install.
@@ -31,6 +33,23 @@ test-shard1:
 
 test-shard2:
 	PYTHONPATH=src python -m pytest -x -q $(PYTEST_EXTRA) $(SHARD2_FILES)
+
+# Static gates: ruff (baseline hygiene; skipped with a notice when not
+# installed — the container image has no pip access) + the repo-specific
+# jit/Pallas linter. `--check` exits nonzero on any unwaived finding.
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks; \
+	else \
+		echo "ruff not installed; skipping ruff (repro.analysis still runs)"; \
+	fi
+	PYTHONPATH=src python -m repro.analysis --check src
+
+# Shard 1 under the runtime sanitizer harness: jax_debug_nans,
+# tracer-leak checks, the suite-wide compile ledger, and transfer guards
+# armed inside every sanitize.no_implicit_transfers() block.
+test-sanitize:
+	REPRO_SANITIZE=1 $(MAKE) test-shard1
 
 # Coverage-gated kernels+sensing run (shard 1 exercises those packages).
 test-cov:

@@ -8,7 +8,6 @@ Claims reproduced:
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import metrics

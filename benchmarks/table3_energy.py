@@ -12,7 +12,6 @@ Three reproductions:
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import energy, metrics

@@ -1,0 +1,56 @@
+"""Repo-specific static analysis + runtime sanitizers for the jit runtime.
+
+Every guarantee the serving stack sells — bitwise mesh parity, zero
+recompiles under churn, int32 no-overflow, donation-safe async dispatch —
+is dynamic: it holds only in whichever benchmark happens to exercise it.
+This package checks the *invariant classes behind those guarantees*
+statically, at PR time:
+
+========  ==============================================================
+RA001     Python control flow (``if``/``while``/``assert``/``bool()``)
+          on traced values inside jit/scan/shard_map-reachable functions
+          — a silent trace-time freeze or a ``TracerBoolConversionError``
+          at the first real call.
+RA002     Impurity inside jit-reachable code (``np.random``, ``time``,
+          I/O, ``print``): runs at *trace* time, once, then never again —
+          plus bare ``np.random`` anywhere in ``src/`` (the repo
+          generates data with ``jax.random`` under explicit keys).
+RA003     Implicit host<->device sync (``.item()``, ``float(arr)``,
+          ``np.asarray`` on device values) inside jit-reachable code or
+          the hot serving dispatch/collect paths of ``launch/serve.py``
+          and ``launch/cascade.py``.
+RA004     Use-after-donate: a name referenced after being passed at a
+          ``donate_argnums`` position of a donating jit — the buffer the
+          callee may already have aliased away.
+RA005     Recompile hazards: constructing ``jax.jit``/``jax.vmap``/
+          ``shard_map`` inside loops or hot serving paths (a fresh trace
+          cache per tick), and loop-varying values at static argument
+          positions of a known jit (a retrace per iteration).
+RA006     Pallas launch contracts: BlockSpec ``index_map`` arity vs grid
+          rank, index_map return rank vs block rank, ``out_specs`` vs
+          ``out_shape`` arity, missing/mis-sized ``dimension_semantics``.
+========  ==============================================================
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis --check src
+
+Deliberate violations carry an inline waiver **with a reason**::
+
+    np.asarray(extrema)  # repro-lint: disable=RA003 (single fused fetch)
+
+(or on the line above; ``# repro-lint: disable-file=RA002 (reason)``
+waives a whole file). A waiver without a reason is itself an error.
+``--json PATH`` writes machine-readable findings; ``--check`` exits
+non-zero on any unwaived finding. The CI ``lint`` job gates both.
+
+The runtime half lives in :mod:`repro.analysis.sanitize`:
+``REPRO_SANITIZE=1 make test-shard1`` runs the suite with NaN checks,
+tracer-leak checks and a suite-wide compile ledger active, and the
+serving tests wrap their dispatch loops in a transfer guard.
+"""
+
+from repro.analysis.findings import Finding, findings_json
+from repro.analysis.linter import lint_paths, lint_text
+
+__all__ = ["Finding", "findings_json", "lint_paths", "lint_text"]

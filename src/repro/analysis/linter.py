@@ -1,0 +1,64 @@
+"""Driver: files -> Program -> rules -> waiver-filtered findings."""
+
+from __future__ import annotations
+
+import os
+
+from repro.analysis.findings import Finding, apply_waivers, parse_waivers
+from repro.analysis.reachability import Program, index_module
+from repro.analysis.rules import RuleEngine
+
+
+def _collect_files(paths):
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d != "__pycache__")
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+        elif p.endswith(".py"):
+            out.append(p)
+    return out
+
+
+def lint_sources(sources):
+    """Lint {path: text} pairs together as one program.
+
+    Returns the full findings list (waived findings included, marked).
+    """
+    modules = []
+    findings = []
+    for path, text in sources.items():
+        try:
+            modules.append(index_module(path, text))
+        except SyntaxError as e:
+            findings.append(
+                Finding("RA000", path, e.lineno or 0, "syntax error: %s" % e.msg)
+            )
+    program = Program(modules)
+    engine = RuleEngine(program)
+    for idx in modules:
+        engine.check_module(idx)
+    by_path = {}
+    for f in engine.findings:
+        by_path.setdefault(f.path, []).append(f)
+    for path, text in sources.items():
+        waivers = parse_waivers(text)
+        findings.extend(apply_waivers(by_path.get(path, []), waivers, path))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_paths(paths):
+    files = _collect_files(paths)
+    sources = {}
+    for path in files:
+        with open(path, "r", encoding="utf-8") as fh:
+            sources[path] = fh.read()
+    return lint_sources(sources)
+
+
+def lint_text(text, path="fixture.py"):
+    """Lint a single in-memory module (test fixtures)."""
+    return lint_sources({path: text})

@@ -1,0 +1,447 @@
+"""Whole-program jit-reachability over the ``src/`` tree.
+
+The rules in :mod:`repro.analysis.rules` need three global facts no
+single-file pass can supply:
+
+* which functions can end up *inside a trace* — decorated with or passed
+  to ``jax.jit`` / ``lax.scan`` / ``shard_map`` / ``pallas_call`` /
+  ``vmap`` (directly or through ``functools.partial``), plus everything
+  they transitively call;
+* which module-level / instance names are *jit aliases*
+  (``step = jax.jit(fn, static_argnames=..., donate_argnums=...)``),
+  with their static names and donated positions resolved — including
+  through module constants like ``_STEP_STATIC``;
+* which names in a given function resolve to which of the above.
+
+A call *to* a jit alias is a trace boundary: the alias's target is a
+root in its own right, but the caller does not become jit-reachable by
+calling it. That is exactly the serving topology here — host-side
+``dispatch()`` loops invoking module-jitted steps.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+
+def _dotted(node: ast.AST):
+    """Render a Name/Attribute chain as ``a.b.c``; None for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+_JAX_XFORMS = {"jit", "vmap", "pmap", "checkpoint", "remat"}
+# control-flow primitives live under jax.lax only — jax.tree.map and
+# friends are host-side and must NOT make their lambdas jit roots
+_LAX_XFORMS = {
+    "scan", "map", "while_loop", "fori_loop", "cond", "switch",
+    "associative_scan",
+}
+_BARE_XFORMS = {"pallas_call", "shard_map"}
+
+
+def is_transform(expanded: str) -> bool:
+    if expanded is None:
+        return False
+    last = expanded.rsplit(".", 1)[-1]
+    if last in _BARE_XFORMS:
+        return True
+    if last in _LAX_XFORMS:
+        return expanded.startswith("jax.lax.") or expanded.startswith("lax.")
+    return last in _JAX_XFORMS and (expanded.startswith("jax.") or expanded == last)
+
+
+def is_jit_like(expanded: str) -> bool:
+    """Transforms that take static_argnames / donate_argnums."""
+    if expanded is None:
+        return False
+    last = expanded.rsplit(".", 1)[-1]
+    return last in {"jit", "pmap"} and (expanded.startswith("jax.") or expanded == last)
+
+
+@dataclass
+class FunctionInfo:
+    module: str
+    qualname: str
+    path: str
+    node: ast.AST  # FunctionDef / AsyncFunctionDef / Lambda
+    params: tuple = ()
+    kwonly: tuple = ()
+    calls: tuple = ()  # dotted callee strings, in source order
+    callsites: tuple = ()  # (dotted callee, ast.Call) pairs
+
+    @property
+    def key(self) -> str:
+        return "%s:%s" % (self.module, self.qualname)
+
+
+@dataclass
+class JitAlias:
+    module: str
+    qualname: str  # "super_chunk_step" or "CascadeService._jit"
+    line: int
+    target: str = ""  # dotted target as written ("" if unresolved)
+    static_argnames: tuple = ()
+    donate_argnums: tuple = ()
+
+    @property
+    def key(self) -> str:
+        return "%s:%s" % (self.module, self.qualname)
+
+
+@dataclass
+class ModuleIndex:
+    module: str
+    path: str
+    tree: ast.Module
+    text: str
+    imports: dict = field(default_factory=dict)  # alias -> dotted
+    functions: dict = field(default_factory=dict)  # qualname -> FunctionInfo
+    aliases: dict = field(default_factory=dict)  # qualname -> JitAlias
+    constants: dict = field(default_factory=dict)  # NAME -> tuple of literals
+
+    def expand(self, dotted: str) -> str:
+        head, _, rest = dotted.partition(".")
+        base = self.imports.get(head, head)
+        return base + ("." + rest if rest else "")
+
+
+def module_name_for(path: str) -> str:
+    parts = path.replace("\\", "/").rstrip("/").split("/")
+    stem = parts[-1][:-3] if parts[-1].endswith(".py") else parts[-1]
+    parts = parts[:-1] + [stem]
+    if "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    else:
+        parts = [stem]
+    if parts[-1] == "__init__":
+        parts = parts[:-1] or [stem]
+    return ".".join(parts)
+
+
+def _const_strings(node: ast.AST):
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+        return tuple(e.value for e in node.elts)
+    return None
+
+
+def _const_ints(node: ast.AST):
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+        return tuple(e.value for e in node.elts)
+    if isinstance(node, ast.IfExp):
+        # e.g. donate_argnums=(1,) if donate else () -> union of branches
+        a = _const_ints(node.body) or ()
+        b = _const_ints(node.orelse) or ()
+        return tuple(sorted(set(a) | set(b)))
+    return None
+
+
+def unwrap_partial(node: ast.AST, idx: ModuleIndex) -> ast.AST:
+    """``functools.partial(f, ...)`` -> ``f`` (recursively)."""
+    while isinstance(node, ast.Call):
+        name = _dotted(node.func)
+        if name is None:
+            break
+        if idx.expand(name).rsplit(".", 1)[-1] != "partial":
+            break
+        if not node.args:
+            break
+        node = node.args[0]
+    return node
+
+
+class _ModuleVisitor(ast.NodeVisitor):
+    def __init__(self, idx: ModuleIndex):
+        self.idx = idx
+        self.scope = []  # class/function name stack
+        self.roots = []  # dotted names (as written) of transform targets
+        self.lambda_roots = []  # FunctionInfo for lambdas passed to transforms
+
+    # -- imports ---------------------------------------------------------
+    def visit_Import(self, node):
+        for a in node.names:
+            self.idx.imports[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0]
+            )
+
+    def visit_ImportFrom(self, node):
+        base = node.module or ""
+        for a in node.names:
+            self.idx.imports[a.asname or a.name] = (base + "." if base else "") + a.name
+
+    # -- scope tracking --------------------------------------------------
+    def visit_ClassDef(self, node):
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    def _register_function(self, node):
+        qual = ".".join(self.scope + [node.name])
+        args = node.args
+        params = tuple(a.arg for a in args.posonlyargs + args.args)
+        kwonly = tuple(a.arg for a in args.kwonlyargs)
+        callsites = tuple(
+            (name, n)
+            for name, n in (
+                (_dotted(n.func), n) for n in ast.walk(node) if isinstance(n, ast.Call)
+            ) if name
+        )
+        calls = tuple(name for name, _ in callsites)
+        info = FunctionInfo(
+            self.idx.module, qual, self.idx.path, node, params, kwonly, calls, callsites
+        )
+        self.idx.functions[qual] = info
+        for dec in node.decorator_list:
+            target = dec
+            if isinstance(dec, ast.Call):
+                name = _dotted(dec.func)
+                if name and self.idx.expand(name).rsplit(".", 1)[-1] == "partial" and dec.args:
+                    target = dec.args[0]  # @partial(jax.jit, ...)
+                    self._maybe_alias_from_decorator(info, dec)
+                else:
+                    target = dec.func
+            name = _dotted(target)
+            if name and is_transform(self.idx.expand(name)):
+                self.roots.append(qual)
+                if is_jit_like(self.idx.expand(name)) and isinstance(dec, ast.Call):
+                    self._maybe_alias_from_decorator(info, dec)
+
+    def _maybe_alias_from_decorator(self, info, call_node):
+        inner = None
+        for a in call_node.args:
+            name = _dotted(a)
+            if name and is_jit_like(self.idx.expand(name)):
+                inner = name
+        outer = _dotted(call_node.func)
+        if inner is None and not (outer and is_jit_like(self.idx.expand(outer))):
+            return
+        static, donate = self._jit_kwargs(call_node)
+        if static or donate:
+            self.idx.aliases[info.qualname] = JitAlias(
+                self.idx.module, info.qualname, info.node.lineno,
+                target=info.qualname, static_argnames=static, donate_argnums=donate,
+            )
+
+    def visit_FunctionDef(self, node):
+        self._register_function(node)
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- jit aliases & transform-arg roots -------------------------------
+    def _jit_kwargs(self, call):
+        static, donate = (), ()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                static = _const_strings(kw.value)
+                if static is None and isinstance(kw.value, ast.Name):
+                    static = self.idx.constants.get(kw.value.id, ())
+                static = static or ()
+            elif kw.arg in ("donate_argnums", "donate_argnames"):
+                donate = _const_ints(kw.value) or ()
+        return tuple(static), tuple(donate)
+
+    def visit_Assign(self, node):
+        # module constants usable as static_argnames values
+        if not self.scope and len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+            strings = _const_strings(node.value)
+            if strings is not None:
+                self.idx.constants[node.targets[0].id] = strings
+        self._maybe_record_alias(node.targets, node.value)
+        self.generic_visit(node)
+
+    def _maybe_record_alias(self, targets, value):
+        if not isinstance(value, ast.Call):
+            return
+        fname = _dotted(value.func)
+        if fname is None or not is_transform(self.idx.expand(fname)):
+            return
+        # target function(s) of the transform become roots
+        for a in value.args:
+            src = unwrap_partial(a, self.idx)
+            name = _dotted(src)
+            if name:
+                self.roots.append(name)
+        if not is_jit_like(self.idx.expand(fname)):
+            return
+        static, donate = self._jit_kwargs(value)
+        tgt = ""
+        if value.args:
+            tgt = _dotted(unwrap_partial(value.args[0], self.idx)) or ""
+        for t in targets:
+            qual = None
+            if isinstance(t, ast.Name):
+                qual = t.id
+            elif isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name) \
+                    and t.value.id == "self":
+                cls = next((s for s in self.scope if s[:1].isupper()), None)
+                if cls:
+                    qual = "%s.%s" % (cls, t.attr)
+            if qual:
+                self.idx.aliases[qual] = JitAlias(
+                    self.idx.module, qual, value.lineno,
+                    target=tgt, static_argnames=static, donate_argnums=donate,
+                )
+
+    def visit_Call(self, node):
+        fname = _dotted(node.func)
+        if fname and is_transform(self.idx.expand(fname)):
+            for a in node.args:
+                src = unwrap_partial(a, self.idx)
+                name = _dotted(src)
+                if name:
+                    self.roots.append(name)
+                elif isinstance(src, ast.Lambda):
+                    qual = "lambda@%d" % src.lineno
+                    args = src.args
+                    info = FunctionInfo(
+                        self.idx.module, qual, self.idx.path, src,
+                        params=tuple(x.arg for x in args.posonlyargs + args.args),
+                        kwonly=tuple(x.arg for x in args.kwonlyargs),
+                        calls=tuple(
+                            c for c in (
+                                _dotted(n.func) for n in ast.walk(src)
+                                if isinstance(n, ast.Call)
+                            ) if c
+                        ),
+                    )
+                    self.idx.functions[qual] = info
+                    self.lambda_roots.append(qual)
+        self.generic_visit(node)
+
+
+def index_module(path: str, text: str, module: str = None) -> ModuleIndex:
+    tree = ast.parse(text, filename=path)
+    idx = ModuleIndex(module or module_name_for(path), path, tree, text)
+    v = _ModuleVisitor(idx)
+    v.visit(tree)
+    idx._root_names = list(v.roots) + list(v.lambda_roots)  # resolved in Program
+    return idx
+
+
+class Program:
+    """Cross-module index + jit-reachability BFS."""
+
+    def __init__(self, modules):
+        self.modules = {m.module: m for m in modules}
+        self.functions = {}  # "module:qual" -> FunctionInfo
+        self.aliases = {}  # "module:qual" -> JitAlias
+        for m in modules:
+            for f in m.functions.values():
+                self.functions[f.key] = f
+            for a in m.aliases.values():
+                self.aliases[a.key] = a
+        self.reachable = self._compute_reachable()
+
+    # -- name resolution -------------------------------------------------
+    def resolve_function(self, module: str, caller_qual: str, dotted: str):
+        """Resolve a callee's dotted name (as written) to a function key."""
+        idx = self.modules.get(module)
+        if idx is None:
+            return None
+        if dotted.startswith("self."):
+            cls = caller_qual.split(".")[0] if caller_qual else ""
+            cand = "%s:%s.%s" % (module, cls, dotted[5:])
+            if cand in self.functions:
+                return cand
+            return None
+        if "." not in dotted:
+            cand = "%s:%s" % (module, dotted)
+            if cand in self.functions:
+                return cand
+            # nested defs called by bare name inside their enclosing function
+            if caller_qual:
+                cand = "%s:%s.%s" % (module, caller_qual, dotted)
+                if cand in self.functions:
+                    return cand
+            # methods called as bare names inside their own class body
+            if caller_qual and "." in caller_qual:
+                cls = caller_qual.rsplit(".", 1)[0]
+                cand = "%s:%s.%s" % (module, cls, dotted)
+                if cand in self.functions:
+                    return cand
+        expanded = idx.expand(dotted)
+        for mod in self.modules:
+            if expanded.startswith(mod + "."):
+                qual = expanded[len(mod) + 1:]
+                cand = "%s:%s" % (mod, qual)
+                if cand in self.functions:
+                    return cand
+        return None
+
+    def resolve_alias(self, module: str, caller_qual: str, dotted: str):
+        """Resolve a name (as written) to a JitAlias key, if it is one."""
+        idx = self.modules.get(module)
+        if idx is None:
+            return None
+        if dotted.startswith("self."):
+            cls = caller_qual.split(".")[0] if caller_qual else ""
+            cand = "%s:%s.%s" % (module, cls, dotted[5:])
+            if cand in self.aliases:
+                return cand
+            return None
+        cand = "%s:%s" % (module, dotted)
+        if cand in self.aliases:
+            return cand
+        expanded = idx.expand(dotted)
+        for mod in self.modules:
+            if expanded.startswith(mod + "."):
+                cand = "%s:%s" % (mod, expanded[len(mod) + 1:])
+                if cand in self.aliases:
+                    return cand
+        return None
+
+    # -- reachability ----------------------------------------------------
+    def _compute_reachable(self):
+        work = []
+        for m in self.modules.values():
+            for name in getattr(m, "_root_names", ()):
+                key = self.resolve_function(m.module, "", name)
+                if key is None and name in m.functions:
+                    key = m.functions[name].key
+                if key:
+                    work.append(key)
+        for a in self.aliases.values():
+            if a.target:
+                key = self.resolve_function(a.module, "", a.target)
+                if key:
+                    work.append(key)
+        self.roots = set(work)
+        seen = set()
+        while work:
+            key = work.pop()
+            if key in seen or key not in self.functions:
+                continue
+            seen.add(key)
+            f = self.functions[key]
+            for callee in f.calls:
+                # a call to a jit alias is a trace boundary, not an edge
+                if self.resolve_alias(f.module, f.qualname, callee):
+                    continue
+                nxt = self.resolve_function(f.module, f.qualname, callee)
+                if nxt and nxt not in seen:
+                    work.append(nxt)
+        return seen
+
+    def is_reachable(self, info: FunctionInfo) -> bool:
+        return info.key in self.reachable

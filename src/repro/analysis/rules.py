@@ -1,0 +1,997 @@
+"""The RA001–RA006 rule implementations.
+
+Each rule is deliberately repo-shaped rather than fully general: the
+goal is catching the hazard classes this codebase has actually hit
+(trace-frozen control flow, per-tick transform construction, implicit
+syncs on the serving path, use-after-donate on rotating buffers, Pallas
+grid/BlockSpec drift) with near-zero false positives on the idioms the
+repo relies on (kw-only static config, ``.shape`` peeks, explicit
+``device_get`` at collect time). Anything the analysis cannot resolve
+statically it skips silently — an unresolvable form is not a finding.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.reachability import (
+    FunctionInfo,
+    ModuleIndex,
+    Program,
+    _dotted,
+)
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "itemsize"}
+_NEUTRAL_CALLS = {"len", "isinstance", "type", "id", "hash", "repr", "str"}
+_SYNC_BUILTINS = {"int", "float", "complex"}
+_SYNC_EXPANDED = {"numpy.asarray", "numpy.array", "numpy.ascontiguousarray", "jax.device_get"}
+# metadata reads: host results with NO device transfer involved
+_META_EXPANDED = {"numpy.shape", "numpy.ndim", "numpy.size", "numpy.result_type"}
+_IMPURE_PREFIXES = ("numpy.random.", "time.", "random.")
+_IMPURE_BUILTINS = {"open", "input", "print"}
+_PER_CALL_XFORMS = {"jit", "vmap", "pmap", "shard_map", "pallas_call"}
+
+# Host-side serving hot paths: per-tick dispatch/collect loops where an
+# implicit sync stalls the async pipeline (RA003) and per-call transform
+# construction grows a fresh trace cache every tick (RA005).
+_HOT_FILES = ("launch/serve.py", "launch/cascade.py")
+_HOT_FNS = {"dispatch", "collect", "_finish", "flush", "submit", "_launch", "pump"}
+
+
+def _is_hot(info: FunctionInfo) -> bool:
+    if not any(info.path.replace("\\", "/").endswith(f) for f in _HOT_FILES):
+        return False
+    return info.qualname.rsplit(".", 1)[-1] in _HOT_FNS
+
+
+def _target_names(target):
+    out = []
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+    return out
+
+
+def _static_compare(test) -> bool:
+    """Comparisons that are trace-time dispatch, not traced control flow.
+
+    ``x is None`` / ``x is not None`` and ``mode == "pseudo"``-style
+    string comparisons always run on static Python values here — a
+    traced array compared to a string would be a type error long before
+    it was a tracer leak.
+    """
+    if not isinstance(test, ast.Compare):
+        return False
+    if all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops) and any(
+        isinstance(c, ast.Constant) and c.value is None
+        for c in list(test.comparators) + [test.left]
+    ):
+        return True
+    return all(
+        isinstance(c, ast.Constant) and isinstance(c.value, str)
+        for c in test.comparators
+    )
+
+
+class _FnAncestry:
+    """Which registered functions are lexically inside other functions."""
+
+    def __init__(self, idx: ModuleIndex):
+        self.spans = []
+        for f in idx.functions.values():
+            node = f.node
+            end = getattr(node, "end_lineno", node.lineno)
+            self.spans.append((node.lineno, end, f))
+
+    def enclosing(self, f: FunctionInfo):
+        lo = f.node.lineno
+        for a, b, g in self.spans:
+            if g is not f and a < lo and getattr(f.node, "end_lineno", lo) <= b:
+                if not isinstance(g.node, ast.Lambda):
+                    yield g
+
+
+# ---------------------------------------------------------------------------
+# RA001 / RA002 / RA003 inside jit-reachable functions: taint walk
+# ---------------------------------------------------------------------------
+
+
+class _TaintWalker:
+    def __init__(self, engine, idx: ModuleIndex, info: FunctionInfo, tainted,
+                 call_hook=None):
+        self.engine = engine
+        self.idx = idx
+        self.info = info
+        self.tainted = set(tainted)
+        self.call_hook = call_hook
+
+    def _emit(self, rule, node, msg):
+        self.engine.emit(rule, self.idx.path, node.lineno, msg)
+
+    # -- expression taint ------------------------------------------------
+    def _call_kind(self, node: ast.Call):
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            return "item"
+        name = _dotted(node.func)
+        if name is None:
+            return None
+        expanded = self.idx.expand(name)
+        if expanded in _SYNC_EXPANDED:
+            return "sync"
+        if name in _SYNC_BUILTINS:
+            return "sync"
+        if name == "bool":
+            return "bool"
+        if name in _NEUTRAL_CALLS or expanded in _META_EXPANDED:
+            return "neutral"
+        return None
+
+    def taints(self, e) -> bool:
+        if e is None or isinstance(e, ast.Constant):
+            return False
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr in _SHAPE_ATTRS:
+                return False
+            return self.taints(e.value)
+        if isinstance(e, ast.Call):
+            kind = self._call_kind(e)
+            if kind in ("sync", "bool", "neutral", "item"):
+                return False
+            parts = [e.func] if isinstance(e.func, ast.Attribute) else []
+            parts += list(e.args) + [kw.value for kw in e.keywords]
+            return any(self.taints(p) for p in parts)
+        return any(self.taints(c) for c in ast.iter_child_nodes(e))
+
+    # -- findings within one expression ----------------------------------
+    def scan_expr(self, e):
+        if e is None:
+            return
+        for node in ast.walk(e):
+            if isinstance(node, (ast.Lambda,)):
+                self._nested(node)
+            elif isinstance(node, ast.IfExp):
+                self._flag_test(node.test, "conditional expression")
+            elif isinstance(node, ast.BoolOp):
+                for v in node.values:
+                    if not _static_compare(v) and self.taints(v):
+                        self._emit("RA001", node, "`and`/`or` forces bool() on a traced value")
+                        break
+            elif isinstance(node, ast.Call):
+                self._scan_call(node)
+
+    def _scan_call(self, node: ast.Call):
+        if self.call_hook is not None:
+            self.call_hook(self, node)
+        kind = self._call_kind(node)
+        arg_tainted = any(self.taints(a) for a in node.args)
+        if kind == "bool" and arg_tainted:
+            self._emit("RA001", node, "bool() on a traced value")
+        elif kind == "sync" and arg_tainted:
+            self._emit(
+                "RA003", node,
+                "%s on a traced value forces a host sync inside jit-reachable code"
+                % (_dotted(node.func) or "sync call"),
+            )
+        elif kind == "item" and self.taints(node.func.value):
+            self._emit("RA003", node, ".item() on a traced value inside jit-reachable code")
+        name = _dotted(node.func)
+        if name is not None:
+            expanded = self.idx.expand(name)
+            if expanded.startswith(_IMPURE_PREFIXES) or name in _IMPURE_BUILTINS:
+                self._emit(
+                    "RA002", node,
+                    "impure call %s runs at trace time, not per step" % (name + "()"),
+                )
+
+    def _flag_test(self, test, what):
+        while isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            test = test.operand
+        if isinstance(test, ast.BoolOp):
+            for v in test.values:
+                self._flag_test(v, what)
+            return
+        if _static_compare(test):
+            return
+        if self.taints(test):
+            self._emit("RA001", test, "Python %s on a traced value" % what)
+
+    def _nested(self, node):
+        if isinstance(node, ast.Lambda):
+            params = [a.arg for a in node.args.posonlyargs + node.args.args]
+            sub = _TaintWalker(self.engine, self.idx, self.info,
+                               self.tainted | set(params), self.call_hook)
+            sub.scan_expr(node.body)
+            return
+        # a nested def's params are tainted by what its call sites pass
+        # (interprocedural fixpoint), not by fiat — pad_to(x, 0, block)
+        # taints the array, not the static block multiple
+        key = "%s:%s.%s" % (self.idx.module, self.info.qualname, node.name)
+        param_taint = getattr(self.engine, "param_taint", {})
+        if key in param_taint:
+            params = set(param_taint[key])
+        else:
+            params = {a.arg for a in node.args.posonlyargs + node.args.args
+                      if a.arg != "self"}
+        sub = _TaintWalker(self.engine, self.idx, self.info,
+                           self.tainted | params, self.call_hook)
+        sub.walk(node.body)
+
+    # -- statements ------------------------------------------------------
+    def walk(self, stmts):
+        for s in stmts:
+            self._stmt(s)
+
+    def _stmt(self, s):
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._nested(s)
+        elif isinstance(s, ast.If):
+            self._flag_test(s.test, "if")
+            self.scan_expr(s.test)
+            self.walk(s.body)
+            self.walk(s.orelse)
+        elif isinstance(s, ast.While):
+            self._flag_test(s.test, "while")
+            self.scan_expr(s.test)
+            self.walk(s.body)
+            self.walk(s.orelse)
+        elif isinstance(s, ast.Assert):
+            self._flag_test(s.test, "assert")
+            self.scan_expr(s.test)
+        elif isinstance(s, ast.For):
+            if self.taints(s.iter):
+                self._emit("RA001", s, "for loop iterates a traced value")
+            self.scan_expr(s.iter)
+            if self.taints(s.iter):
+                self.tainted.update(_target_names(s.target))
+            self.walk(s.body)
+            self.walk(s.orelse)
+        elif isinstance(s, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = s.value
+            self.scan_expr(value)
+            t = value is not None and self.taints(value)
+            targets = s.targets if isinstance(s, ast.Assign) else [s.target]
+            for tg in targets:
+                for name in _target_names(tg):
+                    if isinstance(s, ast.AugAssign):
+                        t = t or name in self.tainted
+                    (self.tainted.add if t else self.tainted.discard)(name)
+        elif isinstance(s, (ast.Return, ast.Expr)):
+            self.scan_expr(s.value)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self.scan_expr(item.context_expr)
+            self.walk(s.body)
+        elif isinstance(s, ast.Try):
+            self.walk(s.body)
+            for h in s.handlers:
+                self.walk(h.body)
+            self.walk(s.orelse)
+            self.walk(s.finalbody)
+        elif isinstance(s, (ast.Raise,)):
+            if s.exc is not None:
+                self.scan_expr(s.exc)
+
+
+# ---------------------------------------------------------------------------
+# RA003 on host-side serving hot paths: device-likely value tracking
+# ---------------------------------------------------------------------------
+
+
+class _HotPathWalker:
+    """Linear device-likely tracking through dispatch/collect bodies.
+
+    Params (minus ``self``) and anything derived from them — iteration
+    variables, subscripts, attribute loads like ``rec.logits``, results
+    of jit-alias calls — are device-likely. Names rebound from
+    ``np.asarray``/``int``/``float`` become host values. Explicit
+    ``jax.device_get`` / ``.block_until_ready()`` are allowed: the rule
+    flags only the *implicit* sync spellings.
+    """
+
+    def __init__(self, engine, idx: ModuleIndex, info: FunctionInfo, program: Program):
+        self.engine = engine
+        self.idx = idx
+        self.info = info
+        self.program = program
+        self.device = {p for p in info.params if p != "self"} | set(info.kwonly)
+
+    def _emit(self, node, msg):
+        self.engine.emit("RA003", self.idx.path, node.lineno, msg)
+
+    def _hostifying(self, node: ast.Call):
+        name = _dotted(node.func)
+        if name is None:
+            return False
+        if name in _SYNC_BUILTINS or name in _NEUTRAL_CALLS or name == "bool":
+            return True
+        expanded = self.idx.expand(name)
+        return expanded in _SYNC_EXPANDED or expanded in _META_EXPANDED
+
+    def devicey(self, e) -> bool:
+        if e is None or isinstance(e, ast.Constant):
+            return False
+        if isinstance(e, ast.Name):
+            return e.id in self.device
+        if isinstance(e, ast.Attribute):
+            if e.attr in _SHAPE_ATTRS:
+                return False
+            return self.devicey(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.devicey(e.value)
+        if isinstance(e, ast.Call):
+            if self._hostifying(e):
+                return False
+            name = _dotted(e.func)
+            if name is not None and self.program.resolve_alias(
+                    self.idx.module, self.info.qualname, name):
+                return True  # result of a jitted step: device array
+            if isinstance(e.func, ast.Attribute) and self.devicey(e.func.value):
+                return True  # method call on a device-likely container
+            return any(self.devicey(c) for c in list(e.args) + [k.value for k in e.keywords])
+        if isinstance(e, (ast.Tuple, ast.List, ast.IfExp, ast.Starred)):
+            return any(self.devicey(c) for c in ast.iter_child_nodes(e))
+        if isinstance(e, ast.GeneratorExp):
+            return self.devicey(e.elt) or any(self.devicey(g.iter) for g in e.generators)
+        return False
+
+    def _scan_expr(self, e):
+        if e is None:
+            return
+        for node in ast.walk(e):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+                if self.devicey(node.func.value):
+                    self._emit(node, ".item() syncs the device pipeline in a hot serving path")
+                continue
+            name = _dotted(node.func)
+            if name is None:
+                continue
+            expanded = self.idx.expand(name)
+            devicey_arg = any(self.devicey(a) for a in node.args)
+            if expanded in ("numpy.asarray", "numpy.array", "numpy.ascontiguousarray") \
+                    and devicey_arg:
+                self._emit(
+                    node,
+                    "%s() on a device value blocks on transfer in a hot serving path" % name,
+                )
+            elif name in _SYNC_BUILTINS and node.args and devicey_arg:
+                self._emit(
+                    node,
+                    "%s() on a device value forces a scalar sync in a hot serving path" % name,
+                )
+
+    # GeneratorExp comprehension variables over device iterables
+    def _bind_comprehensions(self, e):
+        for node in ast.walk(e):
+            if isinstance(node, (ast.GeneratorExp, ast.ListComp, ast.SetComp, ast.DictComp)):
+                for g in node.generators:
+                    if self.devicey(g.iter):
+                        self.device.update(_target_names(g.target))
+
+    def walk(self, stmts):
+        for s in stmts:
+            self._stmt(s)
+
+    def _stmt(self, s):
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        if isinstance(s, ast.For):
+            self._bind_comprehensions(s.iter)
+            self._scan_expr(s.iter)
+            if self.devicey(s.iter):
+                self.device.update(_target_names(s.target))
+            self.walk(s.body)
+            self.walk(s.orelse)
+            return
+        if isinstance(s, (ast.If, ast.While)):
+            self._bind_comprehensions(s.test)
+            self._scan_expr(s.test)
+            self.walk(s.body)
+            self.walk(s.orelse)
+            return
+        if isinstance(s, ast.With):
+            for item in s.items:
+                self._scan_expr(item.context_expr)
+            self.walk(s.body)
+            return
+        if isinstance(s, ast.Try):
+            self.walk(s.body)
+            for h in s.handlers:
+                self.walk(h.body)
+            self.walk(s.orelse)
+            self.walk(s.finalbody)
+            return
+        for e in ast.iter_child_nodes(s):
+            if isinstance(e, ast.expr):
+                self._bind_comprehensions(e)
+                self._scan_expr(e)
+        if isinstance(s, (ast.Assign, ast.AugAssign, ast.AnnAssign)) and s.value is not None:
+            d = self.devicey(s.value)
+            targets = s.targets if isinstance(s, ast.Assign) else [s.target]
+            for tg in targets:
+                for name in _target_names(tg):
+                    (self.device.add if d else self.device.discard)(name)
+
+
+# ---------------------------------------------------------------------------
+# RA004: use-after-donate
+# ---------------------------------------------------------------------------
+
+
+class _DonationWalker:
+    def __init__(self, engine, idx: ModuleIndex, info: FunctionInfo, program: Program):
+        self.engine = engine
+        self.idx = idx
+        self.info = info
+        self.program = program
+        self.donated = {}  # dotted token -> (alias qualname, donate line)
+        self.local_aliases = {}  # local name -> set of alias keys
+
+    def _alias_keys(self, name):
+        if name in self.local_aliases:
+            return self.local_aliases[name]
+        key = self.program.resolve_alias(self.idx.module, self.info.qualname, name)
+        return {key} if key else set()
+
+    def _donate_positions(self, keys):
+        pos = set()
+        for k in keys:
+            pos |= set(self.program.aliases[k].donate_argnums)
+        return pos
+
+    def walk(self, stmts):
+        for s in stmts:
+            self._stmt(s)
+
+    def _stmt(self, s):
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return
+        if isinstance(s, ast.If):
+            self._uses(s.test)
+            a = dict(self.donated)
+            self.walk(s.body)
+            after_body = self.donated
+            self.donated = a
+            self.walk(s.orelse)
+            self.donated = {**self.donated, **after_body}
+            return
+        if isinstance(s, (ast.For, ast.While)):
+            head = s.iter if isinstance(s, ast.For) else s.test
+            self._uses(head)
+            # two passes: catch cross-iteration use-after-donate
+            self.walk(s.body)
+            self.walk(s.body)
+            self.walk(s.orelse)
+            return
+        if isinstance(s, ast.With):
+            for item in s.items:
+                self._uses(item.context_expr)
+            self.walk(s.body)
+            return
+        if isinstance(s, ast.Try):
+            self.walk(s.body)
+            for h in s.handlers:
+                self.walk(h.body)
+            self.walk(s.orelse)
+            self.walk(s.finalbody)
+            return
+        # ordinary statement: uses first, then donations, then rebinds
+        self._uses(s)
+        for call in [n for n in ast.walk(s) if isinstance(n, ast.Call)]:
+            self._apply_donations(call)
+        if isinstance(s, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = s.targets if isinstance(s, ast.Assign) else [s.target]
+            for tg in targets:
+                tok = _dotted(tg)
+                if tok:
+                    self.donated.pop(tok, None)
+                for name in _target_names(tg):
+                    self.donated.pop(name, None)
+            self._track_local_alias(s)
+        if isinstance(s, ast.Delete):
+            for tg in s.targets:
+                tok = _dotted(tg)
+                if tok:
+                    self.donated.pop(tok, None)
+
+    def _track_local_alias(self, s):
+        if not isinstance(s, ast.Assign) or len(s.targets) != 1:
+            return
+        tg = s.targets[0]
+        if not isinstance(tg, ast.Name):
+            return
+        v = s.value
+        cands = []
+        if isinstance(v, ast.IfExp):
+            cands = [v.body, v.orelse]
+        elif isinstance(v, (ast.Name, ast.Attribute)):
+            cands = [v]
+        keys = set()
+        for c in cands:
+            name = _dotted(c)
+            if name:
+                keys |= self._alias_keys(name)
+        if keys:
+            self.local_aliases[tg.id] = keys
+
+    def _uses(self, node):
+        if node is None:
+            return
+        for n in ast.walk(node):
+            if not isinstance(n, (ast.Name, ast.Attribute)):
+                continue
+            if not isinstance(getattr(n, "ctx", None), ast.Load):
+                continue
+            tok = _dotted(n)
+            if tok in self.donated:
+                alias, line = self.donated[tok]
+                self.engine.emit(
+                    "RA004", self.idx.path, n.lineno,
+                    "'%s' used after being donated to %s (line %d); the buffer "
+                    "may already be aliased away" % (tok, alias, line),
+                )
+                self.donated.pop(tok, None)  # report once per donation
+
+    def _apply_donations(self, call: ast.Call):
+        name = _dotted(call.func)
+        if name is None:
+            return
+        keys = self._alias_keys(name)
+        if not keys:
+            return
+        for pos in self._donate_positions(keys):
+            if pos < len(call.args):
+                tok = _dotted(call.args[pos])
+                if tok:
+                    self.donated[tok] = (name, call.lineno)
+
+
+# ---------------------------------------------------------------------------
+# RA005: recompile hazards
+# ---------------------------------------------------------------------------
+
+
+class _RecompileWalker:
+    def __init__(self, engine, idx: ModuleIndex, info: FunctionInfo, program: Program):
+        self.engine = engine
+        self.idx = idx
+        self.info = info
+        self.program = program
+        self.hot = _is_hot(info)
+
+    def run(self):
+        self._walk(self.info.node.body, loop_vars=(), in_loop=False)
+
+    def _walk(self, stmts, loop_vars, in_loop):
+        for s in stmts:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(s, (ast.For, ast.While)):
+                inner = tuple(loop_vars)
+                if isinstance(s, ast.For):
+                    inner = inner + tuple(_target_names(s.target))
+                for e in ast.iter_child_nodes(s):
+                    if isinstance(e, ast.expr):
+                        self._exprs(e, loop_vars, in_loop)
+                self._walk(s.body, inner, True)
+                self._walk(s.orelse, loop_vars, in_loop)
+                continue
+            for e in ast.iter_child_nodes(s):
+                if isinstance(e, ast.expr):
+                    self._exprs(e, loop_vars, in_loop)
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(s, attr, None)
+                if isinstance(sub, list) and sub and isinstance(sub[0], ast.stmt):
+                    self._walk(sub, loop_vars, in_loop)
+            for h in getattr(s, "handlers", []):
+                self._walk(h.body, loop_vars, in_loop)
+
+    def _exprs(self, e, loop_vars, in_loop):
+        for node in ast.walk(e):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            if name is None:
+                continue
+            expanded = self.idx.expand(name)
+            last = expanded.rsplit(".", 1)[-1]
+            if last in _PER_CALL_XFORMS and (
+                expanded.startswith("jax.") or last in ("shard_map", "pallas_call")
+                or expanded == last
+            ):
+                if in_loop:
+                    self.engine.emit(
+                        "RA005", self.idx.path, node.lineno,
+                        "%s constructed inside a loop: a fresh trace/cache entry "
+                        "per iteration" % name,
+                    )
+                elif self.hot:
+                    self.engine.emit(
+                        "RA005", self.idx.path, node.lineno,
+                        "%s constructed per call in hot serving path '%s': hoist "
+                        "to module scope" % (name, self.info.qualname),
+                    )
+                continue
+            if in_loop:
+                self._check_static_args(node, name, loop_vars)
+
+    def _check_static_args(self, call, name, loop_vars):
+        key = self.program.resolve_alias(self.idx.module, self.info.qualname, name)
+        if key is None:
+            return
+        alias = self.program.aliases[key]
+        if not alias.static_argnames:
+            return
+        target_params = ()
+        tkey = self.program.resolve_function(alias.module, "", alias.target) if alias.target else None
+        if tkey:
+            tf = self.program.functions[tkey]
+            target_params = tf.params + tf.kwonly
+        static = set(alias.static_argnames)
+        hazards = []
+        for i, a in enumerate(call.args):
+            pname = target_params[i] if i < len(target_params) else None
+            if pname in static and self._mentions(a, loop_vars):
+                hazards.append(pname)
+        for kw in call.keywords:
+            if kw.arg in static and self._mentions(kw.value, loop_vars):
+                hazards.append(kw.arg)
+        for pname in hazards:
+            self.engine.emit(
+                "RA005", self.idx.path, call.lineno,
+                "loop-varying value passed at static arg '%s' of %s: retrace "
+                "per iteration" % (pname, name),
+            )
+
+    @staticmethod
+    def _mentions(e, loop_vars):
+        return any(
+            isinstance(n, ast.Name) and n.id in loop_vars for n in ast.walk(e)
+        )
+
+
+# ---------------------------------------------------------------------------
+# RA006: Pallas launch contracts
+# ---------------------------------------------------------------------------
+
+
+def _literal_len(node, local=None):
+    """Static length of a tuple/list literal, through ``[x]*k`` and names."""
+    if local and isinstance(node, ast.Name) and node.id in local:
+        return _literal_len(local[node.id], None)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        if isinstance(node.right, ast.Constant) and isinstance(node.right.value, int):
+            inner = _literal_len(node.left, local)
+            if inner is not None:
+                return inner * node.right.value
+        if isinstance(node.left, ast.Constant) and isinstance(node.left.value, int):
+            inner = _literal_len(node.right, local)
+            if inner is not None:
+                return inner * node.left.value
+    return None
+
+
+def _as_list(node, local=None):
+    """Elements of a list/tuple literal, through names and ``[x]*k``."""
+    if local and isinstance(node, ast.Name) and node.id in local:
+        return _as_list(local[node.id], None)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        if isinstance(node.right, ast.Constant) and isinstance(node.right.value, int):
+            inner = _as_list(node.left, local)
+            if inner is not None:
+                return inner * node.right.value
+    return None
+
+
+class _PallasChecker:
+    def __init__(self, engine, idx: ModuleIndex):
+        self.engine = engine
+        self.idx = idx
+
+    def run(self):
+        for f in self.idx.functions.values():
+            local = {}
+            for n in ast.walk(f.node):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                        and isinstance(n.targets[0], ast.Name):
+                    local[n.targets[0].id] = n.value
+            for n in ast.walk(f.node):
+                if isinstance(n, ast.Call):
+                    name = _dotted(n.func)
+                    if name and self.idx.expand(name).rsplit(".", 1)[-1] == "pallas_call":
+                        self._check(n, local)
+
+    def _emit(self, node, msg):
+        self.engine.emit("RA006", self.idx.path, node.lineno, msg)
+
+    def _kw(self, call, name):
+        for kw in call.keywords:
+            if kw.arg == name:
+                return kw.value
+        return None
+
+    def _resolve(self, node, local):
+        while isinstance(node, ast.Name) and node.id in local:
+            nxt = local[node.id]
+            if nxt is node:
+                break
+            node = nxt
+        return node
+
+    def _block_specs(self, node, local):
+        """Yield BlockSpec constructor Call nodes from in_specs/out_specs."""
+        elems = _as_list(node, local)
+        if elems is None:
+            elems = [node]  # single spec, not wrapped in a list
+        for e in elems:
+            e = self._resolve(e, local)
+            if isinstance(e, ast.Call):
+                name = _dotted(e.func)
+                if name and self.idx.expand(name).rsplit(".", 1)[-1] == "BlockSpec":
+                    yield e
+                else:
+                    yield None
+            else:
+                yield None
+
+    def _check(self, call, local):
+        grid_node = self._kw(call, "grid")
+        grid_rank = None
+        if grid_node is not None:
+            g = self._resolve(grid_node, local)
+            grid_rank = _literal_len(g, local)
+            if grid_rank is None and not isinstance(g, (ast.Tuple, ast.List)):
+                grid_rank = 1 if isinstance(g, (ast.Constant, ast.Name, ast.BinOp)) else None
+                if not isinstance(g, ast.Constant):
+                    grid_rank = None  # non-literal scalar grid: skip arity checks
+
+        for role in ("in_specs", "out_specs"):
+            specs_node = self._kw(call, role)
+            if specs_node is None:
+                continue
+            for spec in self._block_specs(specs_node, local):
+                if spec is None:
+                    continue
+                self._check_spec(spec, grid_rank, local)
+
+        out_specs = self._kw(call, "out_specs")
+        out_shape = self._kw(call, "out_shape")
+        if out_specs is not None and out_shape is not None:
+            n_specs = _literal_len(self._resolve(out_specs, local), local)
+            n_shapes = _literal_len(self._resolve(out_shape, local), local)
+            if n_specs is not None and n_shapes is not None and n_specs != n_shapes:
+                self._emit(
+                    call,
+                    "out_specs has %d entries but out_shape has %d" % (n_specs, n_shapes),
+                )
+            self._check_out_ranks(out_specs, out_shape, local)
+
+        self._check_dimension_semantics(call, grid_rank, local)
+
+    def _check_spec(self, spec, grid_rank, local):
+        args = list(spec.args)
+        block_shape = args[0] if args else self._kw(spec, "block_shape")
+        index_map = args[1] if len(args) > 1 else self._kw(spec, "index_map")
+        block_rank = _literal_len(self._resolve(block_shape, local), local) \
+            if block_shape is not None else None
+        if index_map is None:
+            return
+        index_map = self._resolve(index_map, local)
+        if not isinstance(index_map, ast.Lambda):
+            return
+        arity = len(index_map.args.posonlyargs + index_map.args.args)
+        if grid_rank is not None and arity != grid_rank:
+            self._emit(
+                spec,
+                "BlockSpec index_map takes %d grid indices but grid has rank %d"
+                % (arity, grid_rank),
+            )
+        ret = index_map.body
+        ret_len = len(ret.elts) if isinstance(ret, ast.Tuple) else 1
+        if block_rank is not None and ret_len != block_rank:
+            self._emit(
+                spec,
+                "BlockSpec index_map returns %d block coordinates but block_shape "
+                "has rank %d" % (ret_len, block_rank),
+            )
+
+    def _check_out_ranks(self, out_specs, out_shape, local):
+        specs = list(self._block_specs(out_specs, local))
+        shapes = _as_list(self._resolve(out_shape, local), local)
+        if shapes is None:
+            shapes = [out_shape]
+        for spec, shp in zip(specs, shapes):
+            if spec is None:
+                continue
+            shp = self._resolve(shp, local)
+            if not isinstance(shp, ast.Call):
+                continue
+            name = _dotted(shp.func)
+            if not name or "ShapeDtypeStruct" not in name:
+                continue
+            shape_arg = shp.args[0] if shp.args else self._kw(shp, "shape")
+            full_rank = _literal_len(self._resolve(shape_arg, local), local) \
+                if shape_arg is not None else None
+            args = list(spec.args)
+            block_shape = args[0] if args else self._kw(spec, "block_shape")
+            block_rank = _literal_len(self._resolve(block_shape, local), local) \
+                if block_shape is not None else None
+            if full_rank is not None and block_rank is not None and full_rank != block_rank:
+                self._emit(
+                    spec,
+                    "out_spec block_shape rank %d does not match ShapeDtypeStruct "
+                    "rank %d" % (block_rank, full_rank),
+                )
+
+    def _check_dimension_semantics(self, call, grid_rank, local):
+        cp = self._kw(call, "compiler_params")
+        if cp is None:
+            self._emit(
+                call,
+                "pallas_call without compiler_params(dimension_semantics=...): "
+                "grid axes default to arbitrary/sequential",
+            )
+            return
+        cp = self._resolve(cp, local)
+        ds = None
+        if isinstance(cp, ast.Call):
+            ds = self._kw(cp, "dimension_semantics")
+        if isinstance(cp, ast.Dict):
+            for k, v in zip(cp.keys, cp.values):
+                if isinstance(k, ast.Constant) and k.value == "dimension_semantics":
+                    ds = v
+        if ds is None:
+            self._emit(call, "compiler_params without dimension_semantics")
+            return
+        ds_len = _literal_len(self._resolve(ds, local), local)
+        if ds_len is not None and grid_rank is not None and ds_len != grid_rank:
+            self._emit(
+                call,
+                "dimension_semantics has %d entries but grid has rank %d"
+                % (ds_len, grid_rank),
+            )
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class _NullEngine:
+    def emit(self, *args, **kwargs):
+        pass
+
+
+class RuleEngine:
+    def __init__(self, program: Program):
+        self.program = program
+        self.findings = []
+        self._seen = set()
+        self.param_taint = self._compute_param_taint()
+
+    def _root_seed(self, info: FunctionInfo):
+        statics = self._statics_for(info)
+        seed = {p for p in info.params if p not in statics and p != "self"}
+        if isinstance(info.node, ast.Lambda):
+            seed |= set(info.kwonly) - statics
+        return seed
+
+    def _compute_param_taint(self):
+        """Interprocedural param taint: seed jit roots, flow through calls.
+
+        A transitively-reachable helper's param is traced only if some
+        reachable caller actually passes a tainted expression at that
+        position — ``spec_for(x.shape, axes, mesh)`` stays host-static
+        while ``apply_nonlinearity(proj, b)`` taints ``proj``/``b``.
+        Monotone, so a few fixpoint rounds over this repo converge.
+        """
+        program = self.program
+        taint = {}
+        for key in program.reachable:
+            info = program.functions[key]
+            taint[key] = self._root_seed(info) if key in program.roots else set()
+
+        def hook(walker, call):
+            name = _dotted(call.func)
+            if name is None:
+                return
+            if program.resolve_alias(walker.idx.module, walker.info.qualname, name):
+                return  # jit-alias boundary: target is seeded as a root
+            tkey = program.resolve_function(walker.idx.module, walker.info.qualname, name)
+            if tkey not in taint:
+                return
+            tf = program.functions[tkey]
+            statics = self._statics_for(tf)
+            params = list(tf.params)
+            off = 1 if params[:1] == ["self"] else 0
+            for i, a in enumerate(call.args):
+                j = off + i
+                if j < len(params) and params[j] not in statics \
+                        and params[j] not in taint[tkey] and walker.taints(a):
+                    taint[tkey].add(params[j])
+                    hook.changed = True
+            named = set(params) | set(tf.kwonly)
+            for kw in call.keywords:
+                if kw.arg in named and kw.arg not in statics \
+                        and kw.arg not in taint[tkey] and walker.taints(kw.value):
+                    taint[tkey].add(kw.arg)
+                    hook.changed = True
+
+        null = _NullEngine()
+        for _ in range(8):
+            hook.changed = False
+            for key in program.reachable:
+                info = program.functions[key]
+                idx = program.modules.get(info.module)
+                if idx is None:
+                    continue
+                walker = _TaintWalker(null, idx, info, taint[key], call_hook=hook)
+                if isinstance(info.node, ast.Lambda):
+                    walker.scan_expr(info.node.body)
+                else:
+                    walker.walk(info.node.body)
+            if not hook.changed:
+                break
+        return taint
+
+    def emit(self, rule, path, line, msg):
+        key = (rule, path, line)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(Finding(rule, path, line, msg))
+
+    def _statics_for(self, info: FunctionInfo):
+        static = set()
+        for alias in self.program.aliases.values():
+            if not alias.target:
+                continue
+            tkey = self.program.resolve_function(alias.module, "", alias.target)
+            if tkey == info.key or alias.target == info.qualname and alias.module == info.module:
+                static |= set(alias.static_argnames)
+        return static
+
+    def _standalone(self, idx: ModuleIndex, ancestry: _FnAncestry, info: FunctionInfo):
+        """Analyze info at top level unless a reachable enclosing fn covers it."""
+        for g in ancestry.enclosing(info):
+            if self.program.is_reachable(g):
+                return False
+        return True
+
+    def check_module(self, idx: ModuleIndex):
+        ancestry = _FnAncestry(idx)
+        for info in list(idx.functions.values()):
+            reachable = self.program.is_reachable(info)
+            if reachable and self._standalone(idx, ancestry, info):
+                tainted = self.param_taint.get(info.key, self._root_seed(info))
+                walker = _TaintWalker(self, idx, info, tainted)
+                node = info.node
+                if isinstance(node, ast.Lambda):
+                    walker.scan_expr(node.body)
+                else:
+                    walker.walk(node.body)
+            if not reachable and not isinstance(info.node, ast.Lambda):
+                if _is_hot(info):
+                    _HotPathWalker(self, idx, info, self.program).walk(info.node.body)
+                _DonationWalker(self, idx, info, self.program).walk(info.node.body)
+                _RecompileWalker(self, idx, info, self.program).run()
+        # RA002 anywhere: bare numpy.random in src is a reproducibility smell
+        for n in ast.walk(idx.tree):
+            if isinstance(n, ast.Call):
+                name = _dotted(n.func)
+                if name and idx.expand(name).startswith("numpy.random."):
+                    self.emit(
+                        "RA002", idx.path, n.lineno,
+                        "%s(): host RNG outside jax.random keys breaks replay "
+                        "determinism" % name,
+                    )
+        _PallasChecker(self, idx).run()
+        return self.findings

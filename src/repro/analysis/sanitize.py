@@ -1,0 +1,114 @@
+"""Runtime sanitizer harness: ``REPRO_SANITIZE=1`` turns the suite hostile.
+
+Three independent checks, all zero-cost when disabled:
+
+* **Global flags** (:func:`install_global_checks`): ``jax_debug_nans``
+  (any NaN materializing out of a jitted computation raises at the op
+  that produced it) and ``jax_check_tracer_leaks`` (a tracer escaping
+  its trace — the root cause behind RA001-class bugs — raises instead
+  of silently closing over stale state).
+
+* **Transfer guard** (:func:`no_implicit_transfers`): wraps a dispatch
+  loop in ``jax.transfer_guard("disallow")``. Explicit transfers —
+  ``jax.device_put``, ``jax.device_get``, ``np.asarray(device_array)``
+  — stay legal; *implicit* ones (a Python scalar silently promoted
+  host->device per tick, ``float(arr[0])`` pulling a scalar mid-loop)
+  raise. This is the runtime twin of lint rule RA003.
+
+* **Compile ledger** (:class:`CompileLedger` / :func:`steady_state`):
+  generalizes the ``compile_count()`` witness from the serving tests
+  into a suite-wide monotone counter of XLA compiles, fed by
+  ``jax.monitoring`` compilation events. ``steady_state()`` asserts a
+  region triggers **zero** fresh compiles — the contract every
+  post-warmup serving loop in this repo sells (runtime twin of RA005).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+_ENV = "REPRO_SANITIZE"
+
+# Fired (one or more times per compilation) only when XLA actually
+# compiles; cache hits and warm steady-state steps emit nothing.
+_COMPILE_EVENT = "/jax/compilation_cache/compile_requests_use_cache"
+
+
+def enabled() -> bool:
+    return os.environ.get(_ENV, "").strip() not in ("", "0", "false", "no")
+
+
+class CompileLedger:
+    """Monotone counter of XLA compile events for the whole process."""
+
+    def __init__(self):
+        self.events = 0
+        self._installed = False
+
+    def install(self):
+        if self._installed:
+            return self
+        def _listener(event, **kwargs):
+            if event == _COMPILE_EVENT:
+                self.events += 1
+        jax.monitoring.register_event_listener(_listener)
+        self._installed = True
+        return self
+
+    @contextlib.contextmanager
+    def expect_no_compiles(self, what="steady-state region"):
+        before = self.events
+        yield self
+        grew = self.events - before
+        if grew:
+            raise AssertionError(
+                "compile ledger: %s triggered %d fresh XLA compile event(s); "
+                "steady-state loops must run entirely from the jit cache "
+                "(lint rule RA005 is the static twin of this check)" % (what, grew)
+            )
+
+
+_LEDGER = CompileLedger()
+
+
+def ledger() -> CompileLedger:
+    """The process-wide ledger, installing the listener on first use."""
+    return _LEDGER.install()
+
+
+def steady_state(what="steady-state region"):
+    """``with steady_state():`` asserts zero fresh compiles inside."""
+    return ledger().expect_no_compiles(what)
+
+
+@contextlib.contextmanager
+def no_implicit_transfers(always=False):
+    """Disallow implicit host<->device transfers inside the block.
+
+    Active when ``always=True`` (regression tests for specific fixes)
+    or when ``REPRO_SANITIZE=1`` (suite-wide hostile mode); a no-op
+    otherwise so the guarded tests cost nothing in a normal run.
+    """
+    if always or enabled():
+        with jax.transfer_guard("disallow"):
+            yield
+    else:
+        yield
+
+
+def install_global_checks():
+    """Flip the NaN / tracer-leak config flags for the whole process."""
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_check_tracer_leaks", True)
+
+
+def install_if_enabled():
+    """Conftest hook: activate everything iff REPRO_SANITIZE=1."""
+    if not enabled():
+        return False
+    install_global_checks()
+    ledger()
+    return True

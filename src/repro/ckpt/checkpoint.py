@@ -26,7 +26,6 @@ import json
 import os
 import shutil
 import signal
-import tempfile
 import threading
 import time
 from typing import Any, Callable

@@ -7,7 +7,7 @@ a ``smoke()`` reduced config of the same family for CPU tests.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Literal
 
 

@@ -11,7 +11,6 @@ Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
 
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import asdict, dataclass, field
 

@@ -353,8 +353,9 @@ def fragment_scores_batch(frames: Array, tiles: ScoreTiles, *, h: int,
     mx = (W - w) // stride + 1
     n_dt, h_b, slab_len = tiles.slabs.shape
     td = tiles.block_d
+    # repro-lint: disable=RA001 (td/tiles.w/tiles.stride are static aux fields of the tile pytree — concrete at trace time)
     assert h_b == h and slab_len == td + W - 1, (tiles.slabs.shape, td, W)
-    assert tiles.w == w and tiles.stride == stride
+    assert tiles.w == w and tiles.stride == stride  # repro-lint: disable=RA001 (same static aux fields)
 
     per_stream = tiles.cpos_t.ndim == 4
     if per_stream:

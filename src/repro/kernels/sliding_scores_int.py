@@ -543,9 +543,10 @@ def fragment_scores_batch_int(codes: Array, tiles: IntScoreTiles, *, h: int,
     geom = tiles.geom
     n_dt, gh, slab_len = geom.slabs_q.shape
     td = geom.block_d
+    # repro-lint: disable=RA001 (td/geom.w/geom.stride are static aux fields of the geometry pytree — concrete at trace time)
     assert gh == h and slab_len == td + W - 1, (geom.slabs_q.shape, h, W)
     assert geom.win_mask.shape == (mx, W), (geom.win_mask.shape, mx, W)
-    assert geom.w == w and geom.stride == stride
+    assert geom.w == w and geom.stride == stride  # repro-lint: disable=RA001 (same static aux fields)
 
     per_stream = tiles.cpos_t.ndim == 4
     if per_stream:

@@ -145,6 +145,11 @@ _adc_convert = jax.jit(_adc_convert_fn, donate_argnums=(0,),
 #: float->integer codes cannot alias (dtype change) — no donation.
 _adc_convert_codes = jax.jit(_adc_convert_fn, static_argnames=_ADC_STATIC)
 
+#: uid-keyed noise: one key per slot, folded from the service key by the
+#: slot's persistent sensor uid. Module-jitted so every dispatch tick
+#: reuses one cache entry instead of building a fresh vmap per tick.
+_fold_uid_keys = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))
+
 
 class FleetService:
     """Slot-pooled, double-buffered, checkpointed fleet serving.
@@ -425,11 +430,13 @@ class FleetService:
                 raise ValueError(f"sensor {sid!r} is not attached")
             first = fr if first is None else first
         if first is not None and self._frame_hw is None:
-            fr = np.asarray(first)
-            if fr.ndim != 3:
+            # shape peek only — np.shape reads .shape without pulling a
+            # device arrival to host (the upload happens once, batched)
+            shp = np.shape(first)
+            if len(shp) != 3:
                 raise ValueError(f"expected (chunk_size, H, W) arrival, "
-                                 f"got shape {fr.shape}")
-            self._frame_hw = (int(fr.shape[1]), int(fr.shape[2]))
+                                 f"got shape {shp}")
+            self._frame_hw = (int(shp[1]), int(shp[2]))
             self._frame_pixels = self._frame_hw[0] * self._frame_hw[1]
             if self.precision in adc_sim.INT_PRECISIONS:
                 from repro.kernels import ops as kops
@@ -444,7 +451,7 @@ class FleetService:
                              "to fix the frame shape")
 
         int_codes = (self.precision in adc_sim.INT_PRECISIONS
-                     and all(np.issubdtype(np.asarray(f).dtype, np.integer)
+                     and all(np.issubdtype(np.result_type(f), np.integer)
                              for f in arrivals.values()) and arrivals)
         assemble = np.zeros((S, C, H, W),
                             np.int32 if int_codes else np.float32)
@@ -456,6 +463,7 @@ class FleetService:
             self.control, C,
             np.int32 if int_codes else np.float32)
         for sid, fr in arrivals.items():
+            # repro-lint: disable=RA003 (admission boundary: ragged arrivals are normalized into the host assemble buffer, then uploaded once, batched)
             fr = np.asarray(fr)
             if fr.shape != (C, H, W):
                 raise ValueError(
@@ -473,6 +481,7 @@ class FleetService:
                 if labels is None or sid not in labels:
                     raise ValueError(f'adapt.mode == "label": arrival for '
                                      f"{sid!r} needs labels[{sid!r}]")
+                # repro-lint: disable=RA003 (labels are caller-side host metadata, folded into the batched upload)
                 lab_np[slot] = np.asarray(labels[sid], np.int32)
 
         axes = self._step_axes[0] if self._step_axes else \
@@ -491,9 +500,7 @@ class FleetService:
             frames = stream_mod.adc_view_codes(frames, self.adc_bits,
                                                sigma=self.adc_sigma)
         elif self.adc_bits is not None:
-            keys = jax.vmap(
-                lambda u: jax.random.fold_in(self._adc_key, u))(
-                    self._put(uids, s1))
+            keys = _fold_uid_keys(self._adc_key, self._put(uids, s1))
             codes = self.precision in adc_sim.INT_PRECISIONS
             conv = _adc_convert_codes if codes else _adc_convert
             frames = conv(frames, keys, self._put(starts, s1),
@@ -522,10 +529,13 @@ class FleetService:
         return rec.seq
 
     def _finish(self, rec: _InFlight) -> ServedChunk:
-        s = np.asarray(rec.scores)        # blocks on THIS tick only
-        f = np.asarray(rec.fired)
-        g = np.asarray(rec.gated)
-        smp = np.asarray(rec.sampled)
+        # collect IS the deliberate sync point of the pipeline: these
+        # block only on the OLDEST in-flight tick, after max_inflight
+        # newer ticks were already enqueued behind it.
+        s = np.asarray(rec.scores)  # repro-lint: disable=RA003 (designed sync point: blocks on the oldest in-flight tick only)
+        f = np.asarray(rec.fired)  # repro-lint: disable=RA003 (same designed sync point)
+        g = np.asarray(rec.gated)  # repro-lint: disable=RA003 (same designed sync point)
+        smp = np.asarray(rec.sampled)  # repro-lint: disable=RA003 (same designed sync point)
         latency = time.perf_counter() - rec.t0
         outputs, sampled = {}, {}
         for slot, sid in enumerate(rec.sids):

@@ -329,7 +329,6 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple:
     """ShapeDtypeStruct stand-ins for every step input (no allocation)."""
-    import contextlib
     mesh = None
     # specs don't need a mesh; reuse the cell builder with a null mesh via
     # a tiny shim that skips shardings

@@ -13,7 +13,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 from repro.distributed import sharding as shlib
 

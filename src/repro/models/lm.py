@@ -17,7 +17,6 @@ are small.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

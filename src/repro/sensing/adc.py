@@ -149,6 +149,7 @@ def check_codes_range(codes: Array, bits: int) -> None:
         return
     extrema = jnp.stack([jnp.min(codes), jnp.max(codes)])
     try:
+        # repro-lint: disable=RA003 (deliberate: ONE fused extrema fetch, not two blocking int() pulls; tracing falls through to the except)
         lo, hi = (int(v) for v in np.asarray(extrema))
     except jax.errors.TracerArrayConversionError:
         return

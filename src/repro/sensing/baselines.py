@@ -14,9 +14,6 @@ with ``repro.train.optim.AdamW``.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 

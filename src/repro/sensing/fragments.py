@@ -23,7 +23,7 @@ def sample_fragments(frames, masks, *, h: int, w: int,
     """
     frames = np.asarray(frames)
     masks = np.asarray(masks)
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed)  # repro-lint: disable=RA002 (host-side training-data sampler, explicitly seeded; runs once per job, never under jit)
     H, W = frames.shape[1:]
     frags, labels = [], []
 

@@ -125,6 +125,7 @@ def _event_tracks(key: Array, n_frames: int, cfg: RadarConfig,
     """Shared event machinery: bursts of ``event_len`` frames on linear
     tracks. Returns ``(labels (N,), events [(start, len, cy, cx, vy, vx)])``.
     """
+    # repro-lint: disable=RA002 (host-side scenario generator: the rng is derived from the jax key, so replay stays key-deterministic)
     rng = np.random.default_rng(int(jax.random.randint(key, (), 0,
                                                        2**31 - 1)))
     labels = np.zeros(n_frames, dtype=np.int32)

@@ -15,7 +15,6 @@ sharding; no extra rules needed).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax

@@ -17,9 +17,19 @@ test happens to compile last, not in the one that created the pressure.
 ``jax.clear_caches()`` drops the executables (and their maps) at module
 boundaries, but only once the process is actually map-heavy, so cheap
 modules don't pay recompilation for shared jitted paths.
+
+``REPRO_SANITIZE=1`` additionally arms the runtime sanitizer harness
+(:mod:`repro.analysis.sanitize`) for the whole run: ``jax_debug_nans``
++ ``jax_check_tracer_leaks`` process-wide, the suite-wide compile
+ledger (so ``steady_state()`` regions fail on any fresh XLA compile),
+and the transfer guard inside every ``no_implicit_transfers()`` block.
 """
 
 import pytest
+
+from repro.analysis import sanitize as _sanitize
+
+_SANITIZING = _sanitize.install_if_enabled()
 
 # Clear compiled-executable caches once the process holds this many
 # memory maps. Well under the 65530 default ceiling, with headroom for
@@ -41,6 +51,24 @@ def pytest_addoption(parser):
         "--update-golden", action="store_true", default=False,
         help="rewrite tests/golden/*.json from the current implementation "
              "instead of asserting against it")
+
+
+def pytest_report_header(config):
+    if _SANITIZING:
+        return ("repro sanitizers: ON (debug_nans, tracer-leak checks, "
+                "compile ledger, transfer guard)")
+    return None
+
+
+@pytest.fixture
+def compile_ledger():
+    """The process-wide compile ledger (installs its listener on first use).
+
+    Tests assert steady-state regions with ``ledger.expect_no_compiles()``
+    (or the ``sanitize.steady_state()`` shorthand): any fresh XLA compile
+    inside the block fails the test.
+    """
+    return _sanitize.ledger()
 
 
 @pytest.fixture(autouse=True, scope="module")

@@ -1,0 +1,565 @@
+"""Seeded-defect fixtures for every repro.analysis rule + the sanitizers.
+
+Each RA rule gets the three-way contract: fires on the bad form, stays
+silent on the good form, and a ``repro-lint`` waiver (with a reason)
+suppresses it. The final test self-applies the linter to the shipped
+``src/`` tree — the same gate CI runs — so the tree can never drift
+into unwaived findings without this suite noticing.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import findings_json, lint_text
+from repro.analysis import sanitize
+from repro.analysis.linter import lint_paths
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fired(src, path="fixture.py"):
+    """Unwaived rule codes for an in-memory module."""
+    return [f.rule for f in lint_text(src, path) if not f.waived]
+
+
+# ---------------------------------------------------------------------------
+# RA001: traced control flow
+# ---------------------------------------------------------------------------
+
+def test_ra001_fires_on_if_over_traced():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert "RA001" in fired(src)
+
+
+def test_ra001_fires_on_while_assert_bool_for():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    assert x > 0\n"
+        "    while x < 5:\n"
+        "        x = x + 1\n"
+        "    if bool(x):\n"
+        "        for v in x:\n"
+        "            x = x + v\n"
+        "    return x\n"
+    )
+    assert fired(src).count("RA001") >= 4
+
+
+def test_ra001_silent_on_static_forms():
+    src = (
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def f(x, mode='a'):\n"
+        "    if x.shape[0] > 3:\n"          # shape probe: static
+        "        x = x[:3]\n"
+        "    if mode == 'a':\n"             # string dispatch: static
+        "        return jnp.where(x > 0, x, -x)\n"
+        "    if x is None:\n"               # None check: static
+        "        return x\n"
+        "    return x\n"
+    )
+    assert fired(src) == []
+
+
+def test_ra001_interprocedural_taint_not_blanket():
+    # traced value flows THROUGH a helper call: the helper's `a` is
+    # tainted, its static `mult` is not
+    src = (
+        "import jax\n"
+        "def helper(a, mult):\n"
+        "    if mult == 8:\n"               # static at every call site
+        "        return a\n"
+        "    if a > 0:\n"                   # traced at the call site
+        "        return -a\n"
+        "    return a\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return helper(x, 8)\n"
+    )
+    out = lint_text(src)
+    lines = [f.line for f in out if f.rule == "RA001" and not f.waived]
+    assert lines == [5], "only the traced-param branch may fire"
+
+
+def test_ra001_silent_outside_jit_reachable_code():
+    src = (
+        "def host(x):\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert fired(src) == []
+
+
+def test_ra001_waiver_with_reason_suppresses():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    # repro-lint: disable=RA001 (trace-time constant fold)\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    out = lint_text(src)
+    assert fired(src) == []
+    waived = [f for f in out if f.waived]
+    assert waived and waived[0].waiver_reason == "trace-time constant fold"
+
+
+def test_ra000_waiver_without_reason_is_itself_a_finding():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    # repro-lint: disable=RA001\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert sorted(fired(src)) == ["RA000", "RA001"]
+
+
+# ---------------------------------------------------------------------------
+# RA002: impurity
+# ---------------------------------------------------------------------------
+
+def test_ra002_fires_on_trace_time_impurity():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "import time\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    t = time.time()\n"
+        "    n = np.random.rand()\n"
+        "    print(x)\n"
+        "    return x + n + t\n"
+    )
+    assert fired(src).count("RA002") >= 3
+
+
+def test_ra002_fires_on_host_np_random_anywhere():
+    src = (
+        "import numpy as np\n"
+        "def gen(seed):\n"
+        "    return np.random.default_rng(seed).normal(size=3)\n"
+    )
+    assert "RA002" in fired(src)
+
+
+def test_ra002_silent_on_jax_random():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(key, x):\n"
+        "    return x + jax.random.normal(key, x.shape)\n"
+    )
+    assert fired(src) == []
+
+
+# ---------------------------------------------------------------------------
+# RA003: implicit host<->device sync
+# ---------------------------------------------------------------------------
+
+def test_ra003_fires_in_jit_reachable_code():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    lo = float(x[0])\n"
+        "    hi = np.asarray(x).max()\n"
+        "    return lo + hi\n"
+    )
+    assert fired(src).count("RA003") == 2
+
+
+def test_ra003_fires_in_hot_serving_path():
+    src = (
+        "import numpy as np\n"
+        "class FleetService:\n"
+        "    def dispatch(self, arrivals):\n"
+        "        for sid, fr in arrivals.items():\n"
+        "            peek = np.asarray(fr)\n"
+        "            lo = float(fr[0])\n"
+        "            v = fr.sum().item()\n"
+        "        return peek, lo, v\n"
+    )
+    assert fired(src, "src/repro/launch/serve.py").count("RA003") == 3
+
+
+def test_ra003_silent_on_explicit_and_host_forms():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "class FleetService:\n"
+        "    def dispatch(self, arrivals):\n"
+        "        shp = np.shape(arrivals)\n"          # metadata peek
+        "        host = jax.device_get(arrivals)\n"   # explicit transfer
+        "        buf = np.zeros((4, 4))\n"
+        "        buf2 = np.asarray(buf)\n"            # host-only value
+        "        return shp, host, buf2\n"
+    )
+    assert fired(src, "src/repro/launch/serve.py") == []
+
+
+def test_ra003_hot_path_only_applies_to_serving_files():
+    src = (
+        "import numpy as np\n"
+        "class Thing:\n"
+        "    def dispatch(self, arrivals):\n"
+        "        return np.asarray(arrivals)\n"
+    )
+    assert fired(src, "src/repro/train/loop.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RA004: use-after-donate
+# ---------------------------------------------------------------------------
+
+_DONATE_HEADER = (
+    "import jax\n"
+    "def _step(state, x):\n"
+    "    return state + x\n"
+    "step = jax.jit(_step, donate_argnums=(0,))\n"
+)
+
+
+def test_ra004_fires_on_use_after_donate():
+    src = _DONATE_HEADER + (
+        "def drive(state, xs):\n"
+        "    out = step(state, xs)\n"
+        "    return out + state\n"          # state's buffer is gone
+    )
+    assert "RA004" in fired(src)
+
+
+def test_ra004_rebind_is_the_safe_idiom():
+    src = _DONATE_HEADER + (
+        "def drive(state, xs):\n"
+        "    state = step(state, xs)\n"     # donate + rebind: safe
+        "    return state\n"
+    )
+    assert fired(src) == []
+
+
+def test_ra004_cross_iteration_donation():
+    src = _DONATE_HEADER + (
+        "def drive(state, chunks):\n"
+        "    outs = []\n"
+        "    for c in chunks:\n"
+        "        outs.append(step(state, c))\n"   # donated on iter 1...
+        "    return outs\n"                        # ...reused on iter 2
+    )
+    assert "RA004" in fired(src)
+
+
+def test_ra004_conditional_alias_unions_donations():
+    src = (
+        "import jax\n"
+        "def _f(state, x):\n"
+        "    return state + x\n"
+        "donating = jax.jit(_f, donate_argnums=(0,))\n"
+        "plain = jax.jit(_f)\n"
+        "def drive(state, x, fast):\n"
+        "    fn = donating if fast else plain\n"
+        "    out = fn(state, x)\n"
+        "    return out + state\n"
+    )
+    assert "RA004" in fired(src)
+
+
+# ---------------------------------------------------------------------------
+# RA005: recompile hazards
+# ---------------------------------------------------------------------------
+
+def test_ra005_fires_on_transform_built_in_loop():
+    src = (
+        "import jax\n"
+        "def drive(chunks):\n"
+        "    outs = []\n"
+        "    for c in chunks:\n"
+        "        outs.append(jax.vmap(lambda v: v * 2)(c))\n"
+        "    return outs\n"
+    )
+    assert "RA005" in fired(src)
+
+
+def test_ra005_fires_on_transform_built_in_hot_path():
+    src = (
+        "import jax\n"
+        "class FleetService:\n"
+        "    def dispatch(self, arrivals):\n"
+        "        return jax.vmap(lambda v: v * 2)(arrivals)\n"
+    )
+    assert "RA005" in fired(src, "src/repro/launch/serve.py")
+
+
+def test_ra005_fires_on_loop_varying_static_arg():
+    src = (
+        "import jax\n"
+        "def _step(x, *, bits):\n"
+        "    return x * bits\n"
+        "step = jax.jit(_step, static_argnames=('bits',))\n"
+        "def sweep(x, depths):\n"
+        "    for b in depths:\n"
+        "        x = step(x, bits=b)\n"     # retrace per iteration
+        "    return x\n"
+    )
+    assert "RA005" in fired(src)
+
+
+def test_ra005_silent_on_module_level_and_static_config():
+    src = (
+        "import jax\n"
+        "def _step(x, *, bits):\n"
+        "    return x * bits\n"
+        "step = jax.jit(_step, static_argnames=('bits',))\n"
+        "DOUBLE = jax.vmap(lambda v: v * 2)\n"
+        "def drive(x, chunks):\n"
+        "    for c in chunks:\n"
+        "        x = step(x + c, bits=8)\n"   # loop-invariant static
+        "    return DOUBLE(x)\n"
+    )
+    assert fired(src) == []
+
+
+def test_ra005_resolves_static_argnames_through_module_constants():
+    src = (
+        "import jax\n"
+        "_STATIC = ('bits', 'mode')\n"
+        "def _step(x, *, bits, mode):\n"
+        "    return x * bits\n"
+        "step = jax.jit(_step, static_argnames=_STATIC)\n"
+        "def sweep(x, modes):\n"
+        "    for m in modes:\n"
+        "        x = step(x, bits=8, mode=m)\n"
+        "    return x\n"
+    )
+    assert "RA005" in fired(src)
+
+
+# ---------------------------------------------------------------------------
+# RA006: Pallas launch contracts
+# ---------------------------------------------------------------------------
+
+_PALLAS_HEADER = (
+    "import jax\n"
+    "import jax.numpy as jnp\n"
+    "from jax.experimental import pallas as pl\n"
+    "from jax.experimental.pallas import tpu as pltpu\n"
+    "def kernel(x_ref, o_ref):\n"
+    "    o_ref[...] = x_ref[...]\n"
+)
+
+
+def test_ra006_fires_on_index_map_arity_mismatch():
+    src = _PALLAS_HEADER + (
+        "def launch(x):\n"
+        "    return pl.pallas_call(\n"
+        "        kernel,\n"
+        "        grid=(4, 4),\n"
+        "        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],\n"
+        "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+        "        out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),\n"
+        "        compiler_params=pltpu.CompilerParams(\n"
+        "            dimension_semantics=('parallel', 'parallel')),\n"
+        "    )(x)\n"
+    )
+    assert fired(src).count("RA006") == 1
+
+
+def test_ra006_fires_on_missing_dimension_semantics():
+    src = _PALLAS_HEADER + (
+        "def launch(x):\n"
+        "    return pl.pallas_call(\n"
+        "        kernel,\n"
+        "        grid=(4,),\n"
+        "        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],\n"
+        "        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),\n"
+        "        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.float32),\n"
+        "    )(x)\n"
+    )
+    assert "RA006" in fired(src)
+
+
+def test_ra006_fires_on_out_spec_shape_arity_mismatches():
+    src = _PALLAS_HEADER + (
+        "def launch(x):\n"
+        "    return pl.pallas_call(\n"
+        "        kernel,\n"
+        "        grid=(4,),\n"
+        "        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],\n"
+        "        out_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))] * 2,\n"
+        "        out_shape=[jax.ShapeDtypeStruct((32, 8, 1), jnp.float32)] * 3,\n"
+        "        compiler_params=pltpu.CompilerParams(\n"
+        "            dimension_semantics=('parallel',)),\n"
+        "    )(x)\n"
+    )
+    out = fired(src)
+    # 2 vs 3 outputs, and block rank 2 vs ShapeDtypeStruct rank 3
+    assert out.count("RA006") == 2
+
+
+def test_ra006_fires_on_index_map_return_vs_block_rank():
+    src = _PALLAS_HEADER + (
+        "def launch(x):\n"
+        "    spec = pl.BlockSpec((8, 8), lambda i: (i, 0, 0))\n"
+        "    return pl.pallas_call(\n"
+        "        kernel,\n"
+        "        grid=(4,),\n"
+        "        in_specs=[spec],\n"
+        "        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),\n"
+        "        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.float32),\n"
+        "        compiler_params=pltpu.CompilerParams(\n"
+        "            dimension_semantics=('parallel',)),\n"
+        "    )(x)\n"
+    )
+    assert "RA006" in fired(src)
+
+
+def test_ra006_silent_on_well_formed_launch():
+    src = _PALLAS_HEADER + (
+        "def launch(x):\n"
+        "    n = x.shape[0] // 8\n"
+        "    class_spec = pl.BlockSpec((8, 8), lambda i, j: (i, j))\n"
+        "    return pl.pallas_call(\n"
+        "        kernel,\n"
+        "        grid=(n, 4),\n"
+        "        in_specs=[class_spec],\n"
+        "        out_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))] * 2,\n"
+        "        out_shape=[jax.ShapeDtypeStruct((32, 32), jnp.float32)] * 2,\n"
+        "        compiler_params=pltpu.CompilerParams(\n"
+        "            dimension_semantics=('parallel', 'parallel')),\n"
+        "    )(x)\n"
+    )
+    assert fired(src) == []
+
+
+# ---------------------------------------------------------------------------
+# findings JSON + file-level waivers
+# ---------------------------------------------------------------------------
+
+def test_findings_json_shape():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    # repro-lint: disable=RA001 (deliberate)\n"
+        "    if x < 0:\n"
+        "        return -x\n"
+        "    return x\n"
+    )
+    payload = json.loads(findings_json(lint_text(src)))
+    assert payload["total"] == 2
+    assert payload["unwaived"] == 1
+    by_line = {f["line"]: f for f in payload["findings"]}
+    assert by_line[4]["waived"] is False
+    assert by_line[7]["waived"] is True
+    assert by_line[7]["waiver_reason"] == "deliberate"
+    assert payload["rules"]["RA001"]
+
+
+def test_file_level_waiver():
+    src = (
+        "# repro-lint: disable-file=RA002 (host-side data generation module)\n"
+        "import numpy as np\n"
+        "def gen():\n"
+        "    return np.random.rand()\n"
+    )
+    out = lint_text(src)
+    assert fired(src) == []
+    assert all(f.waived for f in out if f.rule == "RA002")
+
+
+# ---------------------------------------------------------------------------
+# self-application: the shipped tree stays clean (CI's lint gate)
+# ---------------------------------------------------------------------------
+
+def test_src_tree_has_zero_unwaived_findings():
+    findings = lint_paths([os.path.join(REPO, "src")])
+    unwaived = [f.render() for f in findings if not f.waived]
+    assert unwaived == [], "\n".join(unwaived)
+    # every surviving waiver carries a written reason
+    for f in findings:
+        if f.waived:
+            assert f.waiver_reason.strip(), f.render()
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizers
+# ---------------------------------------------------------------------------
+
+def test_compile_ledger_counts_fresh_compiles_only():
+    ledger = sanitize.ledger()
+
+    @jax.jit
+    def g(x):
+        return x * 3 + 1
+
+    # build every input up front: eager ops (+) compile kernels too, and
+    # those events must not land inside the measured regions
+    x = jnp.arange(7.0)
+    x2 = (x + 1).block_until_ready()
+    before = ledger.events
+    g(x).block_until_ready()              # fresh compile
+    assert ledger.events > before
+    warm = ledger.events
+    g(x2).block_until_ready()             # cache hit
+    assert ledger.events == warm
+
+
+def test_steady_state_raises_on_fresh_compile():
+    @jax.jit
+    def h(x):
+        return x - 2
+
+    x = jnp.arange(5.0)
+    x2 = (x + 1).block_until_ready()      # pre-build: eager + compiles too
+    xr = x.reshape(5, 1).block_until_ready()
+    h(x).block_until_ready()              # warm the cache
+    with sanitize.steady_state("warm region"):
+        h(x2).block_until_ready()         # fine: cached
+    with pytest.raises(AssertionError, match="compile ledger"):
+        with sanitize.steady_state("cold region"):
+            h(xr).block_until_ready()     # new shape: compiles
+
+
+def test_transfer_guard_blocks_implicit_transfers():
+    y = jnp.arange(4.0)
+    with sanitize.no_implicit_transfers(always=True):
+        host = np.asarray(y)              # explicit d2h: allowed
+        dev = jax.device_put(host)        # explicit h2d: allowed
+        with pytest.raises(Exception, match="[Dd]isallow"):
+            float(y[0])                   # implicit scalar pull
+    assert host.shape == dev.shape
+
+
+def test_sanitize_enabled_env_parsing(monkeypatch):
+    for raw, want in [("", False), ("0", False), ("false", False),
+                      ("1", True), ("true", True), ("yes", True)]:
+        monkeypatch.setenv("REPRO_SANITIZE", raw)
+        assert sanitize.enabled() is want
+    monkeypatch.delenv("REPRO_SANITIZE")
+    assert sanitize.enabled() is False
+    # disabled guard is a transparent no-op
+    with sanitize.no_implicit_transfers():
+        assert float(jnp.arange(3.0)[1]) == 1.0

@@ -362,3 +362,32 @@ def test_cascade_rejects_mismatched_frames(detector):
         casc.submit(0, [0], np.zeros((1, 8, 8), np.float32))
     with pytest.raises(ValueError, match="disagree"):
         casc.submit(0, [0, 1], np.zeros((1, *HW), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sanitizer-harness regression (repro.analysis.sanitize)
+# ---------------------------------------------------------------------------
+
+from repro.analysis import sanitize  # noqa: E402
+
+
+def test_warm_cascade_batches_are_compile_clean(detector, compile_ledger):
+    """Post-warmup cascade batches run entirely from the jit cache.
+
+    The backbone compiles exactly once for the fixed ``(B, H, W)`` batch
+    shape; every later launch — ragged submits included — must trigger
+    zero fresh XLA compiles, and submitting *device* drains must not
+    perform implicit transfers (host queueing is the waived, explicit
+    admission boundary).
+    """
+    cfg, params = detector
+    casc = CascadeService(params, cfg, batch_size=2, frame_hw=HW)
+    casc.submit(0, [0, 1], frames_of(2, seed=1))         # warmup batch
+    casc.flush()
+    with compile_ledger.expect_no_compiles("warm cascade batches"), \
+            sanitize.no_implicit_transfers(always=True):
+        dev = jax.device_put(frames_of(2, seed=2))
+        casc.submit(1, [2, 3], dev)                       # device drain
+        casc.submit(0, [4], frames_of(1, seed=3))         # ragged tail
+        got = casc.flush()
+    assert sum(len(b.frame_idx) for b in got) == 3

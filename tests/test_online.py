@@ -26,7 +26,6 @@ import numpy as np
 import pytest
 
 from repro.core import encoding, fragment_model as fm, hypersense, online
-from repro.core.encoding import encode_fragments, flat_perm_base
 from repro.core.online import AdaptConfig
 from repro.core.sensor_control import ControllerConfig
 from repro.kernels import ops as kops
@@ -379,7 +378,6 @@ def test_fleet_shared_adapt_sharded_folds_time_ordered():
         pytest.skip("needs >= 2 devices "
                     "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     from repro.distributed import sharding as shlib
-    from repro.sensing import fleet as fleet_mod
 
     m = make_model()
     S, N, cs = 3, 8, 4                         # S=3 never divides >=2 devs

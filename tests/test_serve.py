@@ -446,3 +446,75 @@ def test_mesh_sharded_service_matches_unsharded():
     for sid in ref:
         for a, b in zip(cat(got[sid]), cat(ref[sid])):
             np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# sanitizer-harness regressions (repro.analysis.sanitize)
+# ---------------------------------------------------------------------------
+
+from repro.analysis import sanitize  # noqa: E402
+from repro.launch import serve as serve_mod  # noqa: E402
+
+
+def test_warm_dispatch_is_compile_and_transfer_clean(compile_ledger):
+    """Pins the fixes behind lint findings RA003/RA005 in ``dispatch()``.
+
+    After warmup, serving ticks on the uid-keyed ADC path — whose
+    per-tick ``jax.vmap`` used to rebuild a fresh trace every call, and
+    whose shape probe used to round-trip the first arrival through
+    ``np.asarray`` — must trigger ZERO fresh XLA compiles and no
+    implicit host<->device transfers, even for device-array arrivals.
+    """
+    model = make_model()
+    trace = make_trace(2, 6 * C)
+    svc = FleetService(model, CFG, n_slots=2, chunk_size=C, backend="jnp",
+                       adc_bits=5, adc_sigma=0.02)
+    svc.attach(0)
+    svc.attach(1)
+    svc.dispatch({0: trace[0, :C], 1: trace[1, :C]})     # warmup compiles
+    svc.flush()
+    dev = jax.device_put(trace[0, C:2 * C])              # device arrival
+    with compile_ledger.expect_no_compiles("warm dispatch ticks"), \
+            sanitize.no_implicit_transfers(always=True):
+        svc.dispatch({0: dev, 1: trace[1, C:2 * C]})
+        svc.dispatch({0: trace[0, 2 * C:3 * C]})
+    assert svc.flush(), "guarded ticks must still produce results"
+
+
+def test_uid_key_fold_is_hoisted_not_per_tick():
+    """The ADC key fold is one module-level jit, reused across ticks."""
+    model = make_model()
+    trace = make_trace(1, 8 * C)
+    svc = FleetService(model, CFG, n_slots=1, chunk_size=C, backend="jnp",
+                       adc_bits=5, adc_sigma=0.02)
+    svc.attach(0)
+    svc.dispatch({0: trace[0, :C]})          # first tick traces the fold
+    after_first = serve_mod._fold_uid_keys._cache_size()
+    for t in range(1, 4):
+        svc.dispatch({0: trace[0, t * C:(t + 1) * C]})
+    svc.flush()
+    assert serve_mod._fold_uid_keys._cache_size() == after_first, \
+        "per-tick key folding must reuse one jitted trace per fleet shape"
+
+
+def test_device_arrivals_bitwise_match_host_arrivals():
+    """``np.shape``/``np.result_type`` probes see device and host arrivals
+    identically — same outputs bitwise, including int-codes detection."""
+    model = make_model()
+    trace = make_trace(1, 2 * C)
+    codes = np.clip(np.abs(trace) * 8, 0, 31).astype(np.int32)
+
+    def play(arrival_of):
+        svc = FleetService(model, CFG, n_slots=1, chunk_size=C,
+                           backend="jnp", precision="int8", adc_bits=5)
+        svc.attach(0)
+        for t in range(2):
+            svc.dispatch({0: arrival_of(codes[0, t * C:(t + 1) * C])})
+        got = {}
+        drain(svc, got)
+        return got
+
+    host = play(lambda a: a)
+    dev = play(jax.device_put)
+    for a, b in zip(cat(host[0]), cat(dev[0])):
+        np.testing.assert_array_equal(a, b)

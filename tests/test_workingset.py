@@ -11,7 +11,6 @@ re-materializes shifts cannot land silently.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
